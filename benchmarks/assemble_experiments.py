@@ -1,0 +1,63 @@
+"""Splice the live roofline table + dry-run summary into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.assemble_experiments
+"""
+from __future__ import annotations
+
+import io
+import json
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+from . import roofline
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def table(mesh: str) -> str:
+    buf = io.StringIO()
+    argv = sys.argv
+    sys.argv = ["roofline", "--md", "--mesh", mesh]
+    try:
+        with redirect_stdout(buf):
+            roofline.main()
+    finally:
+        sys.argv = argv
+    return buf.getvalue()
+
+
+def summary() -> str:
+    recs = [json.loads(p.read_text())
+            for p in Path("experiments/dryrun").glob("*.json")]
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    skip = sum(1 for r in recs if r.get("status") == "skipped")
+    err = sum(1 for r in recs if r.get("status") == "error")
+    fits = sum(1 for r in recs if r.get("status") == "ok"
+               and r["memory"].get("peak_tpu_estimate",
+                                   r["memory"]["peak_estimate"]) < 16e9)
+    worst = max((r["memory"].get("peak_tpu_estimate", 0), r["arch"],
+                 r["shape"], r["mesh"])
+                for r in recs if r.get("status") == "ok")
+    return (f"**Status: {ok} compiled ok / {skip} documented skips / "
+            f"{err} errors; {fits}/{ok} within the 16 GB v5e budget "
+            f"(TPU-corrected); worst cell {worst[1]} {worst[2]} "
+            f"{worst[3]} at {worst[0] / 1e9:.1f} GB.**\n")
+
+
+def main():
+    md = Path("EXPERIMENTS.md").read_text()
+    block = (MARK + "\n\n" + summary() + "\n### Single-pod (16×16)\n\n"
+             + table("single") + "\n### Multi-pod (2×16×16)\n\n"
+             + table("multi"))
+    pre = md.split(MARK)[0]
+    post = md.split(MARK)[-1]
+    # keep everything after the old marker section's next heading
+    tail_idx = post.find("\n## §Perf")
+    tail = post[tail_idx:] if tail_idx >= 0 else ""
+    Path("EXPERIMENTS.md").write_text(pre + block + tail)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark utilities: wall-clock timing + CSV rows.
+
+Methodology note (EXPERIMENTS.md §Deviation): this container exposes ONE
+physical CPU core, so the paper's speedup-vs-threads axis is reproduced
+structurally (work decomposition + bit-equality under shard counts),
+while WCT comparisons across algorithms / N / α reproduce directly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Best-of-iters wall time in seconds (incl. building ancillary data
+    structures, as the paper's WCT does; excludes input generation)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") else r
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def emit_header():
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,29 @@
+"""Fig. 11 — GBM WCT sensitivity to the ncells tuning knob.
+
+Paper claim: the optimum cell count is workload-dependent and drifts
+erratically; correctness must not depend on it (our first-overlapped-cell
+dedup replaces the res-set).  N scaled to CPU budget.
+"""
+from __future__ import annotations
+
+from repro.core import paper_workload, match_count
+from repro.core.grid import gbm_count
+
+from .common import bench, row
+
+N = 100_000
+ALPHA = 100.0
+
+
+def run():
+    S, U = paper_workload(seed=7, n_total=N, alpha=ALPHA)
+    want = match_count(S, U, algo="sbm")
+    best = (None, float("inf"))
+    for ncells in (30, 100, 300, 1000, 3000, 10000):
+        t = bench(gbm_count, S, U, ncells=ncells, iters=2)
+        k = gbm_count(S, U, ncells=ncells)
+        assert k == want, (ncells, k, want)
+        if t < best[1]:
+            best = (ncells, t)
+        row(f"fig11/gbm_ncells{ncells}", t, f"K={k}")
+    row("fig11/gbm_best", best[1], f"ncells={best[0]}")

@@ -1,0 +1,35 @@
+"""Fig. 12(a) — WCT vs N for ITM/SBM at α=100 (polylog growth);
+Fig. 12(b) — WCT vs α at fixed N: SBM is α-independent, ITM is
+output-sensitive (grows with α).  Paper ranges 1e7–1e8 scale to
+1e4–1e6 on this host; the claims are about *shape*, which reproduces.
+"""
+from __future__ import annotations
+
+from repro.core import paper_workload, match_count
+
+from .common import bench, row
+
+
+def run():
+    # (a) WCT vs N at alpha = 100
+    for n in (10_000, 100_000, 300_000, 1_000_000):
+        S, U = paper_workload(seed=1, n_total=n, alpha=100.0)
+        t_itm = bench(match_count, S, U, algo="itm", iters=2)
+        t_sbm = bench(match_count, S, U, algo="sbm", iters=2)
+        t_bin = bench(match_count, S, U, algo="sbm_binary", iters=2)
+        k = match_count(S, U, algo="sbm")
+        assert k == match_count(S, U, algo="itm")
+        row(f"fig12a/itm_n{n}", t_itm, f"K={k}")
+        row(f"fig12a/sbm_n{n}", t_sbm, f"K={k}")
+        row(f"fig12a/sbm_binary_n{n}", t_bin, f"K={k}")
+
+    # (b) WCT vs alpha at N = 1e6
+    n = 1_000_000
+    for alpha in (0.01, 1.0, 100.0):
+        S, U = paper_workload(seed=2, n_total=n, alpha=alpha)
+        t_itm = bench(match_count, S, U, algo="itm", iters=2)
+        t_sbm = bench(match_count, S, U, algo="sbm", iters=2)
+        k = match_count(S, U, algo="sbm")
+        assert k == match_count(S, U, algo="itm")
+        row(f"fig12b/itm_alpha{alpha}", t_itm, f"K={k}")
+        row(f"fig12b/sbm_alpha{alpha}", t_sbm, f"K={k}")

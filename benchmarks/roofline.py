@@ -1,0 +1,89 @@
+"""Roofline table formatter — reads experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                                 [--mesh single] [--md]
+
+Per (arch × shape): the three §Roofline terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-device peak memory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ARCH_ORDER = ["qwen2_0_5b", "llama3_2_3b", "yi_9b", "qwen3_14b",
+              "zamba2_2_7b", "deepseek_v2_236b", "phi3_5_moe_42b",
+              "chameleon_34b", "mamba2_780m", "whisper_medium"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str, mesh: str):
+    recs = {}
+    for f in Path(dirpath).glob(f"*_{mesh}.json"):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt(x, w=9):
+    if x is None:
+        return " " * w
+    return f"{x:{w}.2e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+
+    sep = " | " if args.md else "  "
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collect_s",
+           "dominant", "useful", "peakGB", "roofline%"]
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "|".join("---" for _ in hdr) + "|")
+    else:
+        print(("%-17s %-11s %9s %9s %9s %-10s %6s %7s %6s") % tuple(hdr))
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                line = [arch, shape, "-", "-", "-", "skipped", "-", "-",
+                        "-"]
+            elif r["status"] == "error":
+                line = [arch, shape, "-", "-", "-", "ERROR", "-", "-",
+                        "-"]
+            else:
+                rf = r["roofline"]
+                dom = rf["dominant"].replace("_s", "")
+                terms = [rf["compute_s"], rf["memory_s"],
+                         rf["collective_s"]]
+                # roofline fraction: ideal compute time / achievable
+                # step time (sum is pessimistic-no-overlap; max is
+                # perfect-overlap — report vs max)
+                frac = rf["compute_s"] / max(max(terms), 1e-30)
+                peak = r["memory"].get("peak_tpu_estimate",
+                                       r["memory"]["peak_estimate"])
+                line = [arch, shape,
+                        f"{terms[0]:.2e}", f"{terms[1]:.2e}",
+                        f"{terms[2]:.2e}", dom,
+                        f"{rf['useful_flops_ratio']:.2f}"
+                        if rf.get("useful_flops_ratio") else "-",
+                        f"{peak / 1e9:.2f}",
+                        f"{100 * frac:.1f}"]
+            if args.md:
+                print("| " + " | ".join(str(x) for x in line) + " |")
+            else:
+                print("%-17s %-11s %9s %9s %9s %-10s %6s %7s %6s"
+                      % tuple(line))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark runner — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only figX]``
+prints ``name,us_per_call,derived`` CSV (fig13 rows carry bytes — see
+the unit tag in `derived`).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+from .common import emit_header
+
+MODULES = [
+    "benchmarks.fig9_speedup",
+    "benchmarks.fig11_gbm_cells",
+    "benchmarks.fig12_scaling",
+    "benchmarks.fig13_memory",
+    "benchmarks.fig14_koln",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter, e.g. fig12")
+    args = ap.parse_args()
+    emit_header()
+    t0 = time.time()
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(name)
+        print(f"# {name}", flush=True)
+        mod.run()
+    print(f"# total_wall_s,{time.time() - t0:.1f},", flush=True)
+
+
+if __name__ == '__main__':
+    main()

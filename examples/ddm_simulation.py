@@ -1,0 +1,71 @@
+"""HLA-style road-traffic pub/sub simulation (paper §1, Fig. 1).
+
+Vehicles move along a 1-D ring road.  Each vehicle owns
+  * an update region centred on its position (its "area of influence"),
+  * a subscription region skewed toward its direction of motion
+    ("a vehicle can safely ignore what happens behind it" — paper §1);
+traffic lights own update regions only.  Every tick the DDM service
+recomputes the overlap deltas for moved vehicles; matched pairs are the
+event routes the RTI would deliver.
+
+    PYTHONPATH=src python examples/ddm_simulation.py
+"""
+import numpy as np
+
+from repro.core import DDMService, make_regions
+
+ROAD = 10_000.0
+N_VEHICLES = 120
+N_LIGHTS = 12
+TICKS = 20
+
+
+def main():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, ROAD, N_VEHICLES)
+    speed = rng.uniform(5.0, 25.0, N_VEHICLES)
+
+    # subscriptions: vehicles look ahead 80 m, back 10 m
+    sub_lo = pos - 10.0
+    sub_hi = pos + 80.0
+    # updates: vehicles radiate 15 m around; lights 30 m, fixed
+    upd_lo = np.concatenate([pos - 15.0,
+                             np.linspace(0, ROAD, N_LIGHTS) - 30.0])
+    upd_hi = np.concatenate([pos + 15.0,
+                             np.linspace(0, ROAD, N_LIGHTS) + 30.0])
+
+    svc = DDMService(make_regions(sub_lo[:, None], sub_hi[:, None]),
+                     make_regions(upd_lo[:, None], upd_hi[:, None]))
+    pairs = svc.connect()
+    print(f"tick  0: {len(pairs):4d} active (subscriber, publisher) "
+          f"routes")
+
+    total_events = len(pairs)
+    for tick in range(1, TICKS + 1):
+        pos = (pos + speed) % ROAD
+        n_changed, delta_add, delta_rm = 0, 0, 0
+        for v in range(N_VEHICLES):
+            # vehicle v's subscription and update regions both move
+            a1, r1 = svc.update_region("sub", v, pos[v] - 10.0,
+                                       pos[v] + 80.0)
+            a2, r2 = svc.update_region("upd", v, pos[v] - 15.0,
+                                       pos[v] + 15.0)
+            delta_add += len(a1) + len(a2)
+            delta_rm += len(r1) + len(r2)
+            n_changed += 1
+        total_events += delta_add
+        print(f"tick {tick:2d}: {len(svc.pairs):4d} routes "
+              f"(+{delta_add:3d}/-{delta_rm:3d} this tick)")
+
+    # cross-check the incremental ledger against a from-scratch match
+    from repro.core import match_count
+    S = make_regions(svc.s_lo[:, None], svc.s_hi[:, None])
+    U = make_regions(svc.u_lo[:, None], svc.u_hi[:, None])
+    k = match_count(S, U, algo="sbm")
+    assert k == len(svc.pairs), (k, len(svc.pairs))
+    print(f"\nledger == from-scratch SBM match ({k} routes); "
+          f"{total_events} route-creation events delivered total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Parallel DDM (Marzolla & D'Angelo, TOMACS 2019) as a TPU-native JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,21 @@
+"""Core DDM matching library (the paper's contribution, in JAX).
+
+Public surface:
+    Regions, make_regions, paper_workload, koln_like_workload
+    match_count / match_pairs / block_mask  (algo = bfm|gbm|sbm|itm|...)
+    DDMService (dynamic regions)
+    distributed: shard_map multi-device SBM (core.distributed)
+"""
+from .regions import (Regions, make_regions, paper_workload,
+                      koln_like_workload, intersect_1d, intersect_dd)
+from .dd_match import (match_count, match_pairs, block_mask, pairs_to_set,
+                       ALGOS)
+from .dynamic import DDMService
+from . import brute, grid, itm, sbm
+
+__all__ = [
+    "Regions", "make_regions", "paper_workload", "koln_like_workload",
+    "intersect_1d", "intersect_dd", "match_count", "match_pairs",
+    "block_mask", "pairs_to_set", "ALGOS", "DDMService",
+    "brute", "grid", "itm", "sbm",
+]

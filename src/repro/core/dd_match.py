@@ -1,0 +1,151 @@
+"""Public DDM matching API — d-dimensional region matching (paper §2).
+
+The d>1 case reduces to d=1: two d-rectangles overlap iff their
+projections overlap on *every* dimension.  The paper combines per-
+dimension 1-D results with hash-set intersection; the TPU-idiomatic
+equivalent here is **match-then-verify**: enumerate candidate pairs on one
+dimension with the chosen 1-D algorithm (static-capacity buffers), then
+filter the candidates on the remaining dimensions with a vectorized
+gather + compare.  This does the same work as set intersection but with
+regular memory access (DESIGN.md §2).
+
+Counting in d>1 requires pair identity, so it shares the enumeration path
+(except BFM, whose tiled mask already tests all dimensions at once).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import brute, grid, itm, sbm
+from .regions import Regions
+
+Array = jax.Array
+
+ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
+
+
+def _project(R: Regions, dim: int) -> Regions:
+    return Regions(R.lo[:, dim:dim + 1], R.hi[:, dim:dim + 1])
+
+
+# ---------------------------------------------------------------------------
+# counting
+# ---------------------------------------------------------------------------
+
+def match_count(S: Regions, U: Regions, algo: str = "sbm", *,
+                max_pairs: int | None = None, **kw) -> int:
+    """Total number of overlapping (subscription, update) pairs."""
+    if algo not in ALGOS:
+        raise ValueError(f"algo must be one of {ALGOS}")
+    if S.d == 1:
+        if algo == "bfm":
+            return brute.bfm_count(S, U, **kw)
+        if algo == "gbm":
+            return grid.gbm_count(S, U, **kw)
+        if algo == "sbm":
+            return sbm.sbm_count_sweep(S, U)
+        if algo == "sbm_chunked":
+            return sbm.sbm_count_chunked(S, U, **kw)
+        if algo == "sbm_binary":
+            return sbm.sbm_count_binary(S, U)
+        if algo == "itm":
+            return itm.itm_count(S, U, **kw)
+    if algo == "bfm":
+        return brute.bfm_count(S, U, **kw)  # mask tests all dims at once
+    # match dim 0, verify the rest
+    if max_pairs is None:
+        max_pairs = _candidate_bound(S, U)
+    pairs, count = match_pairs(S, U, max_pairs=max_pairs, algo=algo, **kw)
+    if int(count) > max_pairs:
+        raise OverflowError(
+            f"d-dim candidate buffer overflow: {int(count)} > {max_pairs}; "
+            "pass a larger max_pairs")
+    return int(count)
+
+
+def _candidate_bound(S: Regions, U: Regions) -> int:
+    """Cheap upper bound on dim-0 candidate count (binary-search SBM)."""
+    c = sbm.sbm_count_per_sub(_project(S, 0), _project(U, 0))
+    return max(int(np.sum(np.asarray(c), dtype=np.int64)), 1)
+
+
+# ---------------------------------------------------------------------------
+# pair enumeration
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_pairs",))
+def _verify_dims(S: Regions, U: Regions, cand: Array, cand_count: Array,
+                 max_pairs: int):
+    """Filter dim-0 candidate pairs on dimensions 1..d-1, recompact."""
+    s_idx, u_idx = cand[:, 0], cand[:, 1]
+    valid = s_idx >= 0
+    si = jnp.maximum(s_idx, 0)
+    ui = jnp.maximum(u_idx, 0)
+    ok = jnp.all(
+        jnp.logical_and(S.lo[si, 1:] < U.hi[ui, 1:],
+                        U.lo[ui, 1:] < S.hi[si, 1:]), axis=-1)
+    ok = ok & valid
+    count = jnp.sum(ok, dtype=jnp.int32)
+    keep = jnp.nonzero(ok, size=max_pairs, fill_value=-1)[0]
+    out = jnp.where(keep[:, None] >= 0, cand[jnp.maximum(keep, 0)], -1)
+    return out, count
+
+
+def match_pairs(S: Regions, U: Regions, max_pairs: int,
+                algo: str = "sbm", **kw):
+    """Enumerate overlapping pairs, each exactly once, −1-padded buffer.
+
+    Returns ``(pairs int32 (max_pairs, 2), count)``.  ``count`` is the
+    exact number of overlaps; if it exceeds ``max_pairs`` the buffer is
+    truncated (caller decides whether that is an overflow).
+    """
+    if algo == "bfm" or (S.d > 1 and algo == "gbm"):
+        return brute.bfm_pairs(S, U, max_pairs)
+    S0, U0 = _project(S, 0), _project(U, 0)
+    if algo in ("sbm", "sbm_chunked", "sbm_binary"):
+        cand, ccount = sbm.sbm_pairs(S0, U0, max_pairs, **kw)
+    elif algo == "itm":
+        T = itm.build_tree(S0)
+        counts = itm.itm_query_counts(T, U0.lo[:, 0], U0.hi[:, 0])
+        cap = max(int(np.max(np.asarray(counts))), 1)
+        ids, _ = itm.itm_query_pairs(T, U0.lo[:, 0], U0.hi[:, 0], cap)
+        nq = ids.shape[0]
+        u_idx = jnp.broadcast_to(
+            jnp.arange(nq, dtype=jnp.int32)[:, None], ids.shape)
+        flat_ok = (ids >= 0).ravel()
+        sel = jnp.nonzero(flat_ok, size=max_pairs, fill_value=-1)[0]
+        s_sel = jnp.where(sel >= 0, ids.ravel()[jnp.maximum(sel, 0)], -1)
+        u_sel = jnp.where(sel >= 0, u_idx.ravel()[jnp.maximum(sel, 0)], -1)
+        cand = jnp.stack([s_sel, u_sel], axis=1)
+        ccount = jnp.asarray(np.sum(np.asarray(counts), dtype=np.int64)
+                             .astype(np.int32))
+    elif algo == "gbm":
+        return brute.bfm_pairs(S, U, max_pairs)
+    else:
+        raise ValueError(f"algo must be one of {ALGOS}")
+    if S.d == 1:
+        return cand, ccount
+    return _verify_dims(S, U, cand, ccount, max_pairs)
+
+
+# ---------------------------------------------------------------------------
+# block masks (DDM as a planner for block-sparse attention; sparse/)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def block_mask(q_lo: Array, q_hi: Array, kv_lo: Array, kv_hi: Array
+               ) -> Array:
+    """(nq, nkv) overlap mask between 1-D query/kv interval batches."""
+    return jnp.logical_and(q_lo[:, None] < kv_hi[None, :],
+                           kv_lo[None, :] < q_hi[:, None])
+
+
+def pairs_to_set(pairs: Array, m: int) -> set[int]:
+    """Host-side helper: −1-padded (k,2) pair buffer → {s*m+u} set."""
+    arr = np.asarray(pairs)
+    arr = arr[arr[:, 0] >= 0]
+    return set((arr[:, 0].astype(np.int64) * m + arr[:, 1]).tolist())

@@ -1,0 +1,164 @@
+"""Multi-device Parallel SBM — paper Alg. 6/7 mapped onto a JAX mesh.
+
+The paper sketches the distributed-memory version in §4: a distributed
+sort, then the prefix computation "based on the Scatter/Gather pattern".
+Here that becomes, under ``shard_map`` over a 1-D device axis:
+
+  step ⓪  **distributed sample-style sort**: endpoints are bucketed by
+          value-range splitters and exchanged with one ``all_to_all``
+          (the Scatter), then each device lex-sorts its value-range
+          segment locally — the bucket sort the paper cites (Solomonik &
+          Kalé [57]).  XLA collectives need static shapes, so every
+          (src, dst) lane carries ``cap`` slots plus a validity mask;
+          overflow is detected and surfaced.
+  step ①  local masked scans of active-count deltas (the counting image
+          of Sadd/Sdel/Uadd/Udel, Alg. 7 lines 1-17);
+  step ②  the "master" exclusive combine (Alg. 7 lines 18-21) becomes an
+          ``all_gather`` of two per-device scalars + a masked sum — the
+          collective prefix the paper predicts stays competitive "on
+          future generations of processors with a higher number of
+          cores";
+  step ③  seeded local sweeps; per-device partial K returned sharded,
+          summed exactly on host in int64.
+
+The same decomposition lowers at any mesh size — the multi-pod dry-run
+compiles it across 512 devices.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .regions import Regions
+
+Array = jax.Array
+AXIS = "shards"
+
+
+def _endpoints_flat(S: Regions, U: Regions):
+    """Unsorted endpoint stream (v, is_lo, is_upd) — host order."""
+    n, m = S.n, U.n
+    v = jnp.concatenate([S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0]])
+    is_lo = jnp.concatenate([jnp.ones(n, jnp.int32), jnp.zeros(n, jnp.int32),
+                             jnp.ones(m, jnp.int32), jnp.zeros(m, jnp.int32)])
+    is_upd = jnp.concatenate([jnp.zeros(2 * n, jnp.int32),
+                              jnp.ones(2 * m, jnp.int32)])
+    return v, is_lo, is_upd
+
+
+def _shard_body(v, is_lo, is_upd, valid, splitters, *, cap: int,
+                nshards: int):
+    """Per-device body under shard_map; all array args are local shards."""
+    me = jax.lax.axis_index(AXIS)
+
+    # -- step ⓪a: bucket by splitters, build (P, cap) send buffers --------
+    bucket = jnp.searchsorted(splitters, v, side="right").astype(jnp.int32)
+    bucket = jnp.where(valid > 0, bucket, nshards - 1)
+    order = jnp.argsort(bucket, stable=True)
+    b_sorted = bucket[order]
+    starts = jnp.searchsorted(b_sorted, jnp.arange(nshards, dtype=jnp.int32),
+                              side="left")
+    rank = jnp.arange(b_sorted.shape[0], dtype=jnp.int32) - starts[b_sorted]
+    overflow = jnp.any((rank >= cap) & (valid[order] > 0)).astype(jnp.int32)
+    ok = rank < cap
+    dst_b = jnp.where(ok, b_sorted, nshards)       # OOB => dropped
+    dst_r = jnp.where(ok, rank, cap)
+
+    def send_buf(x, fill):
+        buf = jnp.full((nshards, cap), fill, x.dtype)
+        return buf.at[dst_b, dst_r].set(x[order], mode="drop")
+
+    sv = send_buf(v, jnp.inf)
+    slo = send_buf(is_lo, 0)
+    supd = send_buf(is_upd, 0)
+    sval = send_buf(valid, 0)
+
+    # -- step ⓪b: the Scatter — one all_to_all over the mesh --------------
+    def xchg(x):
+        return jax.lax.all_to_all(x, AXIS, split_axis=0,
+                                  concat_axis=0).reshape(-1)
+
+    rv, rlo, rupd, rval = xchg(sv), xchg(slo), xchg(supd), xchg(sval)
+
+    # -- step ⓪c: local lex-sort of this device's value-range segment -----
+    loc = jnp.lexsort((rlo, rv))        # v asc, hi-before-lo at ties
+    flag_lo = rlo[loc]
+    flag_upd = rupd[loc]
+    val = rval[loc]
+    lo_m = flag_lo * val                # masked endpoint indicators
+    hi_m = (1 - flag_lo) * val
+    sub_f = 1 - flag_upd
+
+    # -- step ①: local delta scans ----------------------------------------
+    d_upd = flag_upd * (lo_m - hi_m)
+    d_sub = sub_f * (lo_m - hi_m)
+    upd_local = jnp.cumsum(d_upd)
+    sub_local = jnp.cumsum(d_sub)
+
+    # -- step ②: exclusive combine across devices -------------------------
+    totals = jnp.stack([upd_local[-1], sub_local[-1]])
+    all_tot = jax.lax.all_gather(totals, AXIS)          # (P, 2)
+    mask = (jnp.arange(nshards) < me)[:, None]
+    carry = jnp.sum(all_tot * mask, axis=0)
+    upd_active = upd_local + carry[0]
+    sub_active = sub_local + carry[1]
+
+    # -- step ③: seeded local sweep ----------------------------------------
+    contrib = hi_m * (sub_f * upd_active + flag_upd * sub_active)
+    part = jnp.sum(contrib, dtype=jnp.int32)
+    return part[None], overflow[None]
+
+
+@partial(jax.jit, static_argnames=("nshards", "cap", "mesh"))
+def _dist_count(v, is_lo, is_upd, valid, splitters, *, nshards: int,
+                cap: int, mesh: Mesh):
+    f = jax.shard_map(
+        partial(_shard_body, cap=cap, nshards=nshards),
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=(P(AXIS), P(AXIS)),
+    )
+    return f(v, is_lo, is_upd, valid, splitters)
+
+
+def distributed_sbm_count(S: Regions, U: Regions, mesh: Mesh | None = None,
+                          overprovision: float = 2.5) -> int:
+    """Total K via multi-device parallel SBM (1-D regions).
+
+    ``mesh``: 1-D mesh over axis "shards"; defaults to all local devices.
+    Raises ``OverflowError`` if a bucket exceeds its static capacity
+    (raise ``overprovision`` — cf. sample-sort splitter quality).
+    """
+    assert S.d == 1
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    nshards = int(np.prod(mesh.devices.shape))
+    v, is_lo, is_upd = _endpoints_flat(S, U)
+    tot = v.shape[0]
+    pad = (-tot) % nshards
+    v = jnp.pad(v, (0, pad), constant_values=jnp.inf)
+    is_lo = jnp.pad(is_lo, (0, pad), constant_values=0)
+    is_upd = jnp.pad(is_upd, (0, pad), constant_values=0)
+    valid = jnp.pad(jnp.ones(tot, jnp.int32), (0, pad), constant_values=0)
+
+    # value-range splitters from sample quantiles (sample sort)
+    sample = np.asarray(v[: min(tot, 65536)])
+    sample = sample[np.isfinite(sample)]
+    if nshards > 1 and sample.size:
+        qs = np.quantile(sample, np.linspace(0, 1, nshards + 1)[1:-1])
+    else:
+        qs = np.zeros((0,))
+    splitters = jnp.asarray(qs.astype(np.float32))
+
+    per_dev = (tot + pad) // nshards
+    cap = int(per_dev * overprovision / nshards) + 16
+    parts, overflow = _dist_count(v, is_lo, is_upd, valid, splitters,
+                                  nshards=nshards, cap=cap, mesh=mesh)
+    if int(np.max(np.asarray(overflow))) > 0:
+        raise OverflowError(
+            "distributed SBM bucket overflow; raise overprovision")
+    return int(np.sum(np.asarray(parts), dtype=np.int64))

@@ -1,0 +1,107 @@
+"""Dynamic DDM service — paper §3 "dynamic interval management".
+
+HLA federates move/resize regions constantly; rerunning the full match is
+wasteful.  The paper keeps two interval trees (T_S over subscriptions,
+T_U over updates): when a region of one kind changes, the overlaps of the
+*changed region only* are recomputed by querying the tree of the opposite
+kind — O(min{n, K lg n}) instead of a full rematch — and the changed
+region is delete+reinserted into its own tree.
+
+Array adaptation: queries use ``core.itm`` exactly as the paper does.
+Structural delete+reinsert on a pointer AVL becomes *deferred rebuild*
+here: the changed set's tree is marked stale and rebuilt (sort + gather,
+O(n lg n), jitted) only when the next query against it arrives, amortizing
+rebuilds across bursts of updates — the standard array-index equivalent.
+The overlap *ledger* is a host-side sorted id set (the paper's Report()
+sink is model-specific; ours returns exact added/removed pair deltas).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import itm
+from .regions import Regions
+
+
+class DDMService:
+    """Stateful pub/sub matching service over 1-D regions."""
+
+    def __init__(self, S: Regions, U: Regions, cap_hint: int = 64):
+        assert S.d == 1 and U.d == 1
+        self.s_lo = np.asarray(S.lo[:, 0]).copy()
+        self.s_hi = np.asarray(S.hi[:, 0]).copy()
+        self.u_lo = np.asarray(U.lo[:, 0]).copy()
+        self.u_hi = np.asarray(U.hi[:, 0]).copy()
+        self._tree_S = None
+        self._tree_U = None
+        self.cap_hint = cap_hint
+        self.pairs: set[tuple[int, int]] = set()
+
+    # -- tree cache ---------------------------------------------------------
+    def _S(self) -> Regions:
+        return Regions(jnp.asarray(self.s_lo)[:, None],
+                       jnp.asarray(self.s_hi)[:, None])
+
+    def _U(self) -> Regions:
+        return Regions(jnp.asarray(self.u_lo)[:, None],
+                       jnp.asarray(self.u_hi)[:, None])
+
+    def tree_S(self):
+        if self._tree_S is None:
+            self._tree_S = itm.build_tree(self._S())
+        return self._tree_S
+
+    def tree_U(self):
+        if self._tree_U is None:
+            self._tree_U = itm.build_tree(self._U())
+        return self._tree_U
+
+    # -- full match (service bring-up) ---------------------------------------
+    def connect(self) -> set[tuple[int, int]]:
+        """Initial full match; populates the overlap ledger."""
+        T = self.tree_S()
+        q_lo, q_hi = jnp.asarray(self.u_lo), jnp.asarray(self.u_hi)
+        counts = itm.itm_query_counts(T, q_lo, q_hi)
+        cap = max(int(np.max(np.asarray(counts)) if counts.size else 0), 1)
+        ids, _ = itm.itm_query_pairs(T, q_lo, q_hi, cap)
+        ids = np.asarray(ids)
+        self.pairs = {(int(s), int(u))
+                      for u in range(ids.shape[0])
+                      for s in ids[u] if s >= 0}
+        return self.pairs
+
+    # -- single-region overlap query -----------------------------------------
+    def _overlaps_of(self, kind: str, lo: float, hi: float) -> set[int]:
+        tree = self.tree_U() if kind == "sub" else self.tree_S()
+        counts = itm.itm_query_counts(
+            tree, jnp.asarray([lo], jnp.float32),
+            jnp.asarray([hi], jnp.float32))
+        cap = max(int(counts[0]), 1)
+        ids, _ = itm.itm_query_pairs(
+            tree, jnp.asarray([lo], jnp.float32),
+            jnp.asarray([hi], jnp.float32), cap)
+        return {int(i) for i in np.asarray(ids)[0] if i >= 0}
+
+    # -- the dynamic operation (paper §3) --------------------------------------
+    def update_region(self, kind: str, idx: int, new_lo: float,
+                      new_hi: float):
+        """Move/resize one region; returns (added, removed) pair deltas."""
+        assert kind in ("sub", "upd")
+        old = self._overlaps_of(kind, *(
+            (self.s_lo[idx], self.s_hi[idx]) if kind == "sub"
+            else (self.u_lo[idx], self.u_hi[idx])))
+        new = self._overlaps_of(kind, new_lo, new_hi)
+        if kind == "sub":
+            self.s_lo[idx], self.s_hi[idx] = new_lo, new_hi
+            self._tree_S = None            # deferred rebuild
+            added = {(idx, u) for u in new - old}
+            removed = {(idx, u) for u in old - new}
+        else:
+            self.u_lo[idx], self.u_hi[idx] = new_lo, new_hi
+            self._tree_U = None
+            added = {(s, idx) for s in new - old}
+            removed = {(s, idx) for s in old - new}
+        self.pairs |= added
+        self.pairs -= removed
+        return added, removed

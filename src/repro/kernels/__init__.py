@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU)."""
+from . import bfm, sbm_sweep, ops, ref

@@ -1,0 +1,82 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These handle padding to tile multiples (with non-matching sentinel
+regions / zero-contribution sentinel endpoints), call the kernels, and
+trim back — so callers never see tile-size constraints.  ``interpret=True``
+(default off) runs the kernel bodies in Python on CPU; ops are used with
+interpret mode in tests and benchmarks on this host, and compile to
+Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import Regions
+from ..core.sbm import _endpoint_stream
+from . import bfm as bfm_kernel
+from . import sbm_sweep as sweep_kernel
+
+
+def _pad_regions(lo, hi, mult: int):
+    n = lo.shape[0]
+    pad = (-n) % mult
+    if pad:
+        lo = jnp.pad(lo, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        hi = jnp.pad(hi, ((0, pad), (0, 0)), constant_values=-jnp.inf)
+    return lo, hi
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "tu", "interpret"))
+def _tile_counts(s_lo, s_hi, u_lo, u_hi, ts, tu, interpret):
+    s_lo, s_hi = _pad_regions(s_lo, s_hi, ts)
+    u_lo, u_hi = _pad_regions(u_lo, u_hi, tu)
+    return bfm_kernel.bfm_tile_counts(s_lo, s_hi, u_lo, u_hi,
+                                      ts=ts, tu=tu, interpret=interpret)
+
+
+def bfm_count_pallas(S: Regions, U: Regions, *, ts: int = 256,
+                     tu: int = 256, interpret: bool = False) -> int:
+    """Total K via the tiled Pallas BFM kernel (any d, any n/m)."""
+    tiles = _tile_counts(S.lo, S.hi, U.lo, U.hi, ts, tu, interpret)
+    return int(np.sum(np.asarray(tiles), dtype=np.int64))
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "tu", "interpret"))
+def _mask_padded(s_lo, s_hi, u_lo, u_hi, ts, tu, interpret):
+    s_lo, s_hi = _pad_regions(s_lo, s_hi, ts)
+    u_lo, u_hi = _pad_regions(u_lo, u_hi, tu)
+    return bfm_kernel.bfm_mask(s_lo, s_hi, u_lo, u_hi,
+                               ts=ts, tu=tu, interpret=interpret)
+
+
+def bfm_mask_pallas(S: Regions, U: Regions, *, ts: int = 256,
+                    tu: int = 256, interpret: bool = False):
+    """(n, m) bool overlap mask via the tiled Pallas kernel."""
+    full = _mask_padded(S.lo, S.hi, U.lo, U.hi, ts, tu, interpret)
+    return full[: S.n, : U.n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _sweep(s_lo, s_hi, u_lo, u_hi, block, interpret):
+    is_lo, is_upd = _endpoint_stream(s_lo, s_hi, u_lo, u_hi)
+    tot = is_lo.shape[0]
+    pad = (-tot) % block
+    # sub-lo sentinels: zero contribution, only bump sub_active at the end
+    is_lo = jnp.pad(is_lo, (0, pad), constant_values=1)
+    is_upd = jnp.pad(is_upd, (0, pad), constant_values=0)
+    out = sweep_kernel.sbm_sweep(is_lo, is_upd, block=block,
+                                 interpret=interpret)
+    return out[:tot]
+
+
+def sbm_count_pallas(S: Regions, U: Regions, *, block: int = 2048,
+                     interpret: bool = False) -> int:
+    """Total K via sort (XLA) + Pallas sweep kernel. 1-D regions."""
+    assert S.d == 1
+    c = _sweep(S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0],
+               block, interpret)
+    return int(np.sum(np.asarray(c), dtype=np.int64))

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes exactly what the corresponding kernel computes,
+with no tiling — tests assert_allclose(kernel(interpret=True), ref(...))
+across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bfm_tile_counts(s_lo, s_hi, u_lo, u_hi, ts: int, tu: int):
+    """Per-(S-tile, U-tile) overlap counts, int32 (n/ts, m/tu).
+
+    Inputs are (n, d)/(m, d) float arrays, n % ts == m % tu == 0.
+    """
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    ok = jnp.all((s_lo[:, None, :] < u_hi[None, :, :]) &
+                 (u_lo[None, :, :] < s_hi[:, None, :]), axis=-1)
+    return ok.reshape(n // ts, ts, m // tu, tu).sum(
+        axis=(1, 3), dtype=jnp.int32)
+
+
+def bfm_mask(s_lo, s_hi, u_lo, u_hi):
+    """Full (n, m) bool overlap mask."""
+    return jnp.all((s_lo[:, None, :] < u_hi[None, :, :]) &
+                   (u_lo[None, :, :] < s_hi[:, None, :]), axis=-1)
+
+
+def chunked_scan(x):
+    """Inclusive prefix sum over a 1-D int32 vector."""
+    return jnp.cumsum(x)
+
+
+def sbm_sweep(is_lo, is_upd):
+    """Per-endpoint SBM report counts given the lex-sorted endpoint
+    stream flags (1-D int32 arrays).  Mirrors core.sbm._sweep_contribs
+    post-sort."""
+    is_hi = 1 - is_lo
+    is_sub = 1 - is_upd
+    upd_active = jnp.cumsum(is_upd * is_lo) - jnp.cumsum(is_upd * is_hi)
+    sub_active = jnp.cumsum(is_sub * is_lo) - jnp.cumsum(is_sub * is_hi)
+    return (is_hi * (is_sub * upd_active + is_upd * sub_active)
+            ).astype(jnp.int32)
+
+
+def windowed_attention(q, k, v, starts, ends, blk_q: int):
+    """Block-sparse causal-window attention oracle.
+
+    q: (sq, dh), k/v: (skv, dh); query block i attends to kv positions
+    [starts[i], ends[i]) (precomputed by the DDM planner).  fp32 softmax.
+    """
+    sq, dh = q.shape
+    skv = k.shape[0]
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T
+              ) / jnp.sqrt(jnp.float32(dh))
+    pos = jnp.arange(skv)[None, :]
+    qb = jnp.arange(sq)[:, None] // blk_q
+    allowed = (pos >= starts[qb]) & (pos < ends[qb])
+    scores = jnp.where(allowed, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+import jax  # noqa: E402  (used by windowed_attention)

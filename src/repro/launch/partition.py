@@ -1,0 +1,198 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs.
+
+GSPMD annotations for the production mesh (DESIGN.md §5):
+
+  batch        → ('pod','data')  (DP across pods + in-pod data axis)
+  d_model dim  → 'data'          (FSDP / ZeRO-3: per-layer all-gather
+                                  inside the layer scan)
+  heads / d_ff / vocab / experts → 'model'  (TP / EP)
+  KV-cache sequence (long_500k, batch=1) → 'data'  (SP)
+
+Rules are matched on param-tree path suffixes; stacked leading layer
+axes are padded with None.  Optimizer state mirrors the param specs
+(m/v shard exactly like their parameter), so optimizer sharding is
+ZeRO-style by construction.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+def _rule_table():
+    """(path-suffix tokens, spec for trailing dims).  DP = FSDP axis
+    ('data'); MP = tensor axis ('model')."""
+    MP, DP = "model", "data"
+    return [
+        # embeddings / unembeddings
+        (("embed", "table"), (MP, DP)),
+        (("lm_head", "w"), (DP, MP)),
+        (("enc_pos",), (None, DP)),
+        # attention projections (d, heads*dh) / (heads*dh, d)
+        (("attn", "wq", "w"), (DP, MP)),
+        (("attn", "wk", "w"), (DP, MP)),
+        (("attn", "wv", "w"), (DP, MP)),
+        (("attn", "wo", "w"), (MP, DP)),
+        (("xattn", "wq", "w"), (DP, MP)),
+        (("xattn", "wk", "w"), (DP, MP)),
+        (("xattn", "wv", "w"), (DP, MP)),
+        (("xattn", "wo", "w"), (MP, DP)),
+        (("wq", "b"), (MP,)),
+        (("wk", "b"), (MP,)),
+        (("wv", "b"), (MP,)),
+        # MLA
+        (("w_dkv", "w"), (DP, None)),
+        (("w_ukv", "w"), (None, MP)),
+        (("w_dq", "w"), (DP, None)),
+        (("w_uq", "w"), (None, MP)),
+        (("attn", "wq", "w"), (DP, MP)),
+        # dense mlp
+        (("w_gate", "w"), (DP, MP)),
+        (("w_up", "w"), (DP, MP)),
+        (("w_down", "w"), (MP, DP)),
+        # moe experts (E, d, f) / (E, f, d); router small -> replicated
+        (("moe", "w_gate"), (MP, DP, None)),
+        (("moe", "w_up"), (MP, DP, None)),
+        (("moe", "w_down"), (MP, None, DP)),
+        (("router", "w"), (DP, None)),
+        # mamba2
+        (("in_proj", "w"), (DP, MP)),
+        (("out_proj", "w"), (MP, DP)),
+        (("conv_w",), (None, MP)),
+        (("conv_b",), (MP,)),
+        (("mixer", "norm", "scale"), (MP,)),
+    ]
+
+
+def _path_tokens(path) -> tuple[str, ...]:
+    toks = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            toks.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            toks.append(str(e.name))
+    return tuple(toks)
+
+
+def spec_for_param(path, leaf) -> P:
+    toks = _path_tokens(path)
+    for suffix, dims in _rule_table():
+        if toks[-len(suffix):] == tuple(suffix):
+            pad = leaf.ndim - len(dims)
+            if pad < 0:
+                continue
+            return P(*((None,) * pad + tuple(dims)))
+    return P()  # replicate (norm scales, small vectors, A_log, ...)
+
+
+def param_specs(params) -> object:
+    return jax.tree_util.tree_map_with_path(spec_for_param, params)
+
+
+def opt_specs(opt_state, pspecs) -> object:
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def batch_dims(mesh: Mesh) -> tuple:
+    """Data-parallel mesh axes for the batch dim."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(mesh: Mesh, batch_example: dict, *, shard_batch=True):
+    dp = batch_dims(mesh) if shard_batch else ()
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        lead = dp if (dp and leaf.shape[0] > 1) else None
+        return P(lead, *((None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_example)
+
+
+def cache_specs(mesh: Mesh, cache_example, *, batch: int,
+                seq_shard: bool) -> object:
+    """KV/SSM cache specs.
+
+    Normal decode/prefill: batch over ('pod','data'); KV heads over
+    'model' when divisible, otherwise the cache *sequence* shards over
+    'model' (the serving-stack convention for kv_heads < tp — attention
+    then reduces over a sequence-sharded context, which XLA lowers to a
+    partial-softmax + all-reduce pattern).
+    long_500k (batch=1): sequence over 'data' (SP), heads over 'model'.
+    """
+    dp = batch_dims(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msz = sizes.get("model", 1)
+
+    def one(path, leaf):
+        toks = _path_tokens(path)
+        nd = leaf.ndim
+        name = toks[-1] if toks else ""
+        # leading stacked layer/group axes padded with None
+        if name in ("k", "v"):          # (..., B, Smax, H, dh)
+            lead = (None,) * (nd - 4)
+            n_heads = leaf.shape[-2]
+            if seq_shard:
+                return P(*lead, None, "data", "model", None)
+            if n_heads % msz == 0:
+                return P(*lead, dp, None, "model", None)
+            return P(*lead, dp, "model", None, None)   # seq over tp
+        if name in ("ckv", "krope"):    # (..., B, Smax, feat)
+            lead = (None,) * (nd - 3)
+            feat = leaf.shape[-1]
+            tp_feat = "model" if feat % msz == 0 else None
+            if seq_shard:
+                return P(*lead, None, "data", tp_feat)
+            if tp_feat:
+                return P(*lead, dp, None, tp_feat)
+            return P(*lead, dp, "model", None)
+        if name == "ssm":               # (..., B, nh, hd, ns)
+            lead = (None,) * (nd - 4)
+            tp_h = "model" if leaf.shape[-3] % msz == 0 else None
+            bdim = None if seq_shard else dp
+            return P(*lead, bdim, tp_h, None, None)
+        if name == "conv":              # (..., B, W-1, C)
+            lead = (None,) * (nd - 3)
+            tp_c = "model" if leaf.shape[-1] % msz == 0 else None
+            bdim = None if seq_shard else dp
+            return P(*lead, bdim, None, tp_c)
+        if name == "enc_out":           # (B, F, d)
+            tp_d = "model" if leaf.shape[-1] % msz == 0 else None
+            return P(None if seq_shard else dp, None, tp_d)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_example)
+
+
+def sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axis names whose size does not divide the dimension.
+
+    jit argument shardings require even tiling; e.g. 2 KV heads cannot
+    shard over a 16-way 'model' axis — such dims fall back to replicated
+    (the Megatron convention for kv_heads < tp).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, n in zip(dims, shape):
+        if d is None:
+            out.append(None)
+            continue
+        axes = d if isinstance(d, tuple) else (d,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        out.append(d if n % total == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(mesh: Mesh, spec_tree, struct_tree):
+    return jax.tree.map(
+        lambda s, x: sanitize(mesh, s, x.shape), spec_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

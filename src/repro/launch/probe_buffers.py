@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+"""Hillclimb tool: compile one cell and print the largest per-device
+HLO tensors (who is eating the memory budget)."""  # noqa: E402
+import argparse
+import re
+
+import numpy as np
+
+from repro.configs import ALIASES, SHAPES, get_config
+from repro.launch.dryrun import _compile_cell, _DTYPE_BYTES
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    cfg = get_config(ALIASES.get(args.arch, args.arch))
+    spec = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    compiled = _compile_cell(cfg, spec, mesh)
+    ma = compiled.memory_analysis()
+    print(f"peak ~ {(ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes - ma.alias_size_in_bytes) / 1e9:.2f} GB "
+          f"(args {ma.argument_size_in_bytes/1e9:.2f} temp "
+          f"{ma.temp_size_in_bytes/1e9:.2f} out "
+          f"{ma.output_size_in_bytes/1e9:.2f} alias "
+          f"{ma.alias_size_in_bytes/1e9:.2f})")
+    sizes = {}
+    for m in re.finditer(r"(pred|[sufbc]\d?\d+)\[([\d,]+)\]",
+                         compiled.as_text()):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _DTYPE_BYTES.get(dt, 4)
+        key = f"{dt}[{dims}]"
+        sizes[key] = b
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{v/1e9:9.2f} GB  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Step builders: train / prefill / decode closures + abstract inputs.
+
+``input_structs`` returns ShapeDtypeStruct stand-ins for every model
+input of an (arch × shape) cell — weak-type-correct, shardable, no
+device allocation (the dry-run contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeSpec
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_structs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """Data inputs (tokens etc.) for one cell, as ShapeDtypeStructs."""
+    B = spec.global_batch
+    if spec.kind == "train":
+        batch = {"tokens": sds((B, spec.seq_len + 1), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                  jnp.bfloat16)
+        return batch
+    if spec.kind == "prefill":
+        batch = {"tokens": sds((B, spec.seq_len), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                  jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of seq_len
+    return {"tokens": sds((B, 1), jnp.int32),
+            "cur_len": sds((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def abstract_opt(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params)
+
+
+def abstract_cache(cfg: ModelConfig, spec: ShapeSpec):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, spec.global_batch, spec.seq_len))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """Train step with optional gradient accumulation
+    (``cfg.grad_accum`` microbatches scanned sequentially — activation
+    memory ÷ k at the cost of k smaller matmuls; the optimizer update
+    sees the mean gradient, so semantics match the monolithic batch)."""
+    k = max(cfg.grad_accum, 1)
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: T.loss_fn(p, batch, cfg), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]),
+                batch)
+
+            def body(acc, mbatch):
+                (l, m), g = grad_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(body, zeros, mb)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        logits, cache = T.prefill(params, batch["tokens"], cfg, cache,
+                                  frames=batch.get("frames"))
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch):
+        logits, cache = T.decode_step(params, batch["tokens"], cfg,
+                                      cache, batch["cur_len"])
+        return logits, cache
+
+    return decode_step

@@ -1,0 +1,3 @@
+"""Model library."""
+from .config import ModelConfig
+from . import layers, attention, mlp, moe, ssm, transformer

@@ -1,0 +1,329 @@
+"""Attention blocks: GQA (with qk-norm / QKV-bias variants) and MLA.
+
+One layer's worth of attention.  All functions are pure; KV caches are
+explicit pytrees threaded by the caller (the stack module scans over
+layers with stacked params/caches).
+
+Memory discipline: scores are never materialized at (Sq, Skv) — the
+query axis is processed in chunks under ``lax.scan`` (flash-style outer
+loop), with bf16 MXU inputs and fp32 accumulation
+(``preferred_element_type``).  The peak live intermediate is
+(B, H, q_chunk, Skv) fp32 per chunk.
+
+Decode path supports the DDM-planned sliding-window read (``window`` in
+the config): the query attends to the sink prefix plus the last
+``window`` cache positions — (start, end) intervals come from the block
+planner in ``repro.sparse``, which is backed by ``core`` matching.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_rope, linear, linear_init, rms_headnorm,
+                     rope_angles)
+from .sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# chunked scaled-dot-product core
+# ---------------------------------------------------------------------------
+
+def chunked_sdpa(q, k, v, q_pos, kv_valid_upto, *, causal: bool = True,
+                 window: int = 0, sink: int = 0, q_chunk: int = 256,
+                 scale: float | None = None, kv_pos=None, kv_allowed=None):
+    """q: (B,Sq,H,G,dh), k: (B,Skv,H,dh), v: (B,Skv,H,dv) → (B,Sq,H,G,dv).
+
+    ``q_pos``: (Sq,) absolute query positions.  ``kv_valid_upto``: number
+    of valid cache positions (scalar).  ``window``/``sink``: DDM-planned
+    sparse read [0, sink) ∪ (q_pos − window, q_pos].  ``kv_pos``: explicit
+    absolute positions of the kv rows (for gathered windows); then
+    ``kv_valid_upto`` applies to positions and ``kv_allowed`` (bool
+    (Skv,)) masks duplicate rows.
+    """
+    B, Sq, H, G, dh = q.shape
+    Skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dh ** -0.5
+    if kv_pos is None:
+        kv_pos = jnp.arange(Skv)
+
+    cq = min(q_chunk, Sq)
+    pad = (-Sq) % cq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+    nchunk = q.shape[1] // cq
+    qs = q.reshape(B, nchunk, cq, H, G, dh).swapaxes(0, 1)
+    ps = q_pos.reshape(nchunk, cq)
+
+    @jax.checkpoint
+    def one_chunk_body(qc, pc):
+        # (B,cq,H,G,dh), (cq,).  Rematted: the (B,H,G,cq,Skv) score
+        # block is recomputed in backward instead of being stacked
+        # across chunks as a residual (the flash-attention memory fix).
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, "dp", "tp", None, None, None)
+        ok = kv_pos[None, :] < kv_valid_upto
+        if kv_allowed is not None:
+            ok = ok & kv_allowed[None, :]
+        if causal:
+            ok = ok & (kv_pos[None, :] <= pc[:, None])
+        if window > 0:
+            ok = ok & ((kv_pos[None, :] > pc[:, None] - window)
+                       | (kv_pos[None, :] < sink))
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)     # fully-masked (pad) rows
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(v.dtype)
+
+    def one_chunk(_, args):
+        qc, pc = args
+        return _, one_chunk_body(qc, pc)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qs, ps))
+    out = outs.swapaxes(0, 1).reshape(B, nchunk * cq, H, G, dv)
+    return out[:, :Sq]
+
+
+def _cache_write(cache: dict, new: dict, start) -> dict:
+    out = dict(cache)
+    for key, val in new.items():
+        buf = cache[key]
+        idx = (0, start) + (0,) * (buf.ndim - 2)
+        out[key] = jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                                idx)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, dh = cfg.d_model, cfg.d_head
+    return {
+        "wq": linear_init(ks[0], d, cfg.n_heads * dh, bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg.n_heads * dh, d,
+                          std=(cfg.n_heads * dh) ** -0.5
+                          / max(2 * cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    dh = cfg.d_head
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+    }
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, positions: Array,
+              cache: dict | None = None, cur_len=0,
+              causal: bool = True, window: int = 0, sink: int = 0):
+    """One attention sublayer.  Returns (y, new_cache)."""
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    dt = x.dtype
+    q = linear(p["wq"], x, dt).reshape(B, S, cfg.n_heads, dh)
+    k = linear(p["wk"], x, dt).reshape(B, S, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], x, dt).reshape(B, S, cfg.n_kv_heads, dh)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q, k = rms_headnorm(q), rms_headnorm(k)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is not None:
+        cache = _cache_write(cache, {"k": k, "v": v}, cur_len)
+        k_all, v_all = cache["k"], cache["v"]
+        valid = cur_len + S
+    else:
+        k_all, v_all = k, v
+        valid = S
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, dh)
+
+    if (cache is not None and S == 1 and window > 0
+            and cfg.window_gather_decode):
+        # --- DDM-window gather decode: materialize only the matched
+        # interval [pos+1−window, pos] plus the sink prefix from the
+        # cache (two dynamic slices) — HBM traffic ∝ window instead of
+        # ∝ context.  The interval comes from the same planner as the
+        # masked path (sparse.planner.decode_window).
+        Smax = k_all.shape[1]
+        W = min(window, Smax)
+        pos = positions[0]
+        start = jnp.clip(pos + 1 - W, 0, Smax - W)
+        k_win = jax.lax.dynamic_slice_in_dim(k_all, start, W, axis=1)
+        v_win = jax.lax.dynamic_slice_in_dim(v_all, start, W, axis=1)
+        kv_pos_w = start + jnp.arange(W)
+        if sink > 0:
+            k_cat = jnp.concatenate([k_all[:, :sink], k_win], axis=1)
+            v_cat = jnp.concatenate([v_all[:, :sink], v_win], axis=1)
+            kv_pos_c = jnp.concatenate([jnp.arange(sink), kv_pos_w])
+            # window rows overlapping the sink prefix are duplicates
+            allowed = jnp.concatenate(
+                [jnp.ones(sink, bool), kv_pos_w >= sink])
+        else:
+            k_cat, v_cat, kv_pos_c = k_win, v_win, kv_pos_w
+            allowed = jnp.ones(W, bool)
+        out = chunked_sdpa(qg, k_cat, v_cat, positions, valid,
+                           causal=causal, q_chunk=cfg.q_chunk,
+                           kv_pos=kv_pos_c, kv_allowed=allowed)
+    else:
+        out = chunked_sdpa(qg, k_all, v_all, positions, valid,
+                           causal=causal, window=window, sink=sink,
+                           q_chunk=cfg.q_chunk)
+    y = linear(p["wo"], out.reshape(B, S, -1), dt)
+    return constrain(y, "dp", None, None), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV, decoupled RoPE key
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": linear_init(ks[0], d, cfg.kv_lora + dr),
+        "w_ukv": linear_init(ks[1], cfg.kv_lora, nh * (dn + dv)),
+        "wo": linear_init(ks[2], nh * dv, d,
+                          std=(nh * dv) ** -0.5
+                          / max(2 * cfg.n_layers, 1) ** 0.5),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora,), jnp.float32)},
+    }
+    if cfg.q_lora:
+        p["w_dq"] = linear_init(ks[3], d, cfg.q_lora)
+        p["q_norm"] = {"scale": jnp.ones((cfg.q_lora,), jnp.float32)}
+        p["w_uq"] = linear_init(ks[4], cfg.q_lora, nh * (dn + dr))
+    else:
+        p["wq"] = linear_init(ks[5], d, nh * (dn + dr))
+    return p
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions: Array,
+              cache: dict | None = None, cur_len=0,
+              causal: bool = True, window: int = 0, sink: int = 0):
+    from .layers import rmsnorm
+
+    B, S, _ = x.shape
+    dt = x.dtype
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    # latent KV path
+    dkv = linear(p["w_dkv"], x, dt)
+    ckv, k_rope = dkv[..., : cfg.kv_lora], dkv[..., cfg.kv_lora:]
+    ckv = rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        cache = _cache_write(cache, {"ckv": ckv, "krope": k_rope}, cur_len)
+        ckv_all, krope_all = cache["ckv"], cache["krope"]
+        valid = cur_len + S
+    else:
+        ckv_all, krope_all = ckv, k_rope
+        valid = S
+
+    # queries
+    if cfg.q_lora:
+        cq = rmsnorm(p["q_norm"], linear(p["w_dq"], x, dt), cfg.norm_eps)
+        q = linear(p["w_uq"], cq, dt).reshape(B, S, nh, dn + dr)
+    else:
+        q = linear(p["wq"], x, dt).reshape(B, S, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    if cache is not None and S == 1 and cfg.mla_absorb:
+        # --- absorbed decode (DeepSeek-V2 §2.1.4 low-rank trick): fold
+        # W_uk into the query and W_uv into the output so attention runs
+        # directly on the (kv_lora)-dim latent cache — no per-head K/V
+        # expansion over the full context.
+        # f32 casts: XLA TPU fuses the converts into MXU dots; the CPU
+        # backend lacks a bf16×bf16→f32 dot thunk, so keep dots in f32.
+        w_ukv = p["w_ukv"]["w"].reshape(cfg.kv_lora, nh, dn + dv)
+        w_uk = w_ukv[..., :dn].astype(jnp.float32)
+        w_uv = w_ukv[..., dn:].astype(dt)
+        q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                           w_uk)
+        s_nope = jnp.einsum("bqhl,bkl->bhqk", q_abs,
+                            ckv_all.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhd,bkd->bhqk",
+                            q_rope.astype(jnp.float32),
+                            krope_all.astype(jnp.float32))
+        scores = (s_nope + s_rope) * ((dn + dr) ** -0.5)
+        Skv = ckv_all.shape[1]
+        kv_pos = jnp.arange(Skv)
+        ok = (kv_pos[None, :] < valid) & \
+            (kv_pos[None, :] <= positions[:, None])
+        if window > 0:
+            ok = ok & ((kv_pos[None, :] > positions[:, None] - window)
+                       | (kv_pos[None, :] < sink))
+        scores = jnp.where(ok[None, None], scores, -jnp.inf)
+        pr = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkl->bqhl", pr,
+                         ckv_all.astype(jnp.float32)).astype(dt)
+        out = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv)
+        y = linear(p["wo"], out.reshape(B, S, nh * dv), dt)
+        return constrain(y, "dp", None, None), cache
+
+    # expand latents to per-head K/V (training / prefill)
+    ukv = linear(p["w_ukv"], ckv_all, dt)
+    Skv = ukv.shape[1]
+    ukv = ukv.reshape(B, Skv, nh, dn + dv)
+    k_nope, vv = ukv[..., :dn], ukv[..., dn:]
+    kk = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(krope_all[:, :, None, :], (B, Skv, nh, dr))],
+        axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    qq = qq.reshape(B, S, nh, 1, dn + dr)
+    qq = constrain(qq, "dp", None, "tp", None, None)
+
+    out = chunked_sdpa(qq, kk, vv, positions, valid, causal=causal,
+                       window=window, sink=sink, q_chunk=cfg.q_chunk,
+                       scale=(dn + dr) ** -0.5)
+    y = linear(p["wo"], out.reshape(B, S, nh * dv), dt)
+    return constrain(y, "dp", None, None), cache
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    return mla_init(key, cfg) if cfg.mla else gqa_init(key, cfg)
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return (mla_cache_init(cfg, batch, max_len, dtype) if cfg.mla
+            else gqa_cache_init(cfg, batch, max_len, dtype))
+
+
+def attn_apply(p, x, cfg: ModelConfig, **kw):
+    return (mla_apply(p, x, cfg, **kw) if cfg.mla
+            else gqa_apply(p, x, cfg, **kw))

@@ -1,0 +1,102 @@
+"""Primitive layers: linear, norms, embeddings, RoPE.
+
+Parameters are plain nested dicts of jnp arrays (master fp32); compute
+casts to the config dtype at use.  Initializers take explicit PRNG keys;
+everything here is shape-polymorphic and jit/vmap/shard_map friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def truncated_normal(key, shape, std):
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape,
+                                             jnp.float32)
+
+
+# -- linear -----------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False,
+                std: float | None = None):
+    std = std if std is not None else d_in ** -0.5
+    p = {"w": truncated_normal(key, (d_in, d_out), std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x, dtype=jnp.bfloat16):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    # fp32 only inside the reduction (dtype=f32 fuses the convert into
+    # the reduce): a wholesale x.astype(f32) materializes an fp32 copy
+    # of the saved residual stack in backward (XLA hoists the convert
+    # out of the layer loop) — see DESIGN §4b.
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def rms_headnorm(x, eps: float = 1e-6):
+    """Parameter-free per-head RMS norm (qk-norm, mamba gated norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# -- embedding ----------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int):
+    return {"table": truncated_normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(p, tokens, dtype=jnp.bfloat16):
+    return p["table"].astype(dtype)[tokens]
+
+
+# -- rotary positional embedding ---------------------------------------------
+
+def rope_angles(positions: Array, dim: int, theta: float) -> tuple[Array, Array]:
+    """cos/sin tables (..., dim/2) for integer positions."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., seq, heads, dim); cos/sin: (seq, dim/2) or broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# -- activations ----------------------------------------------------------------
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    """Token-mean cross entropy; logits cast to f32 for the reduction."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,27 @@
+"""Dense SwiGLU MLP sublayer."""
+from __future__ import annotations
+
+import jax
+
+from .config import ModelConfig
+from .layers import linear, linear_init, swiglu
+from .sharding import constrain
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": linear_init(ks[0], cfg.d_model, d_ff),
+        "w_up": linear_init(ks[1], cfg.d_model, d_ff),
+        "w_down": linear_init(ks[2], d_ff, cfg.d_model,
+                              std=d_ff ** -0.5
+                              / max(2 * cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def mlp_apply(p, x, dtype=None):
+    dt = dtype or x.dtype
+    h = swiglu(linear(p["w_gate"], x, dt), linear(p["w_up"], x, dt))
+    h = constrain(h, "dp", None, "tp")
+    return constrain(linear(p["w_down"], h, dt), "dp", None, None)

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts sublayer — GShard/Switch-style capacity dispatch.
+
+TPU-native formulation: tokens are processed in *groups* (the batch/
+sequence grid reshaped to (G, Tg, d)); within each group every top-k slot
+builds a (Tg, E, C) one-hot dispatch tensor and routes tokens with three
+einsums (dispatch → expert SwiGLU → combine).  The group axis carries the
+data sharding, the expert axis carries expert parallelism ('model'), so
+the dispatch einsums lower to all-to-all-free sharded matmuls under
+GSPMD, and per-device memory is (Tg·E·C) per slot, independent of global
+batch.
+
+Capacity per group per slot C = max(4, ceil(Tg/E · capacity_factor));
+overflow tokens are dropped (standard dropping MoE; the residual stream
+carries them).  Aux load-balance loss is returned to the caller.
+
+DeepSeek-V2 style: ``n_shared_experts`` dense shared experts run on every
+token; ``first_dense_layers`` layers use the plain MLP instead (handled
+by the stack).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import linear_init, swiglu, truncated_normal
+from .sharding import constrain
+from .mlp import mlp_init, mlp_apply
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    std_in = d ** -0.5
+    std_out = f ** -0.5 / max(2 * cfg.n_layers, 1) ** 0.5
+    p = {
+        "router": linear_init(ks[0], d, E),
+        "w_gate": truncated_normal(ks[1], (E, d, f), std_in),
+        "w_up": truncated_normal(ks[2], (E, d, f), std_in),
+        "w_down": truncated_normal(ks[3], (E, f, d), std_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=cfg.n_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, group_tokens: int = 1024):
+    """x: (B, S, d) → (y, aux_loss)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    E, k = cfg.n_experts, cfg.top_k
+    gt = min(group_tokens, S)
+    while S % gt:
+        gt -= 1
+    G = B * (S // gt)
+    xg = constrain(x.reshape(G, gt, d), "dp", None, None)
+    C = max(4, math.ceil(gt / E * cfg.capacity_factor))
+
+    # router matmul in model dtype (an f32 upcast of xg materializes a
+    # full activation copy per layer); logits upcast after — routing
+    # decisions tolerate bf16 scores.  Keep the expert axis REPLICATED
+    # here: top_k over an expert-sharded axis forces XLA into an
+    # involuntary full rematerialization of the (tokens, E) tensor.
+    logits = (xg @ p["router"]["w"].astype(dt)).astype(jnp.float32)
+    logits = constrain(logits, "dp", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)                       # (G,Tg,k)
+    vals = vals / jnp.sum(vals, axis=-1, keepdims=True)       # renorm
+
+    # aux load-balance loss (Switch eq. 4, over all slots)
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    assign = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (G,Tg,k,E)
+    ce = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / k
+
+    @jax.checkpoint
+    def one_slot(xg, slot_idx, slot_vals):
+        # rematted: dispatch/combine one-hots and expert activations are
+        # recomputed in backward instead of living for all k slots.
+        e_onehot = jax.nn.one_hot(slot_idx, E, dtype=jnp.int32)
+        rank = jnp.cumsum(e_onehot, axis=1) - 1               # (G,Tg,E)
+        my_rank = jnp.sum(rank * e_onehot, axis=-1)           # (G,Tg)
+        keep = my_rank < C
+        pos = jax.nn.one_hot(jnp.where(keep, my_rank, C), C, dtype=dt)
+        disp = e_onehot.astype(dt)[..., None] * pos[:, :, None, :]
+        xe = jnp.einsum("gtec,gtd->gecd", disp, xg,
+                        preferred_element_type=jnp.float32).astype(dt)
+        xe = constrain(xe, "dp", "tp", None, None)
+        h = swiglu(
+            jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt)),
+            jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt)))
+        ye = constrain(
+            jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt)),
+            "dp", "tp", None, None)
+        w_slot = (slot_vals * keep).astype(dt)                # (G,Tg)
+        comb = disp * w_slot[..., None, None]
+        return jnp.einsum("gtec,gecd->gtd", comb, ye,
+                          preferred_element_type=jnp.float32).astype(dt)
+
+    out = jnp.zeros_like(xg)
+    for slot in range(k):
+        out = out + one_slot(xg, idx[..., slot], vals[..., slot])
+
+    y = out.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, dt)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within a chunk the recurrence is computed in its dual quadratic
+("attention-like") form on the MXU, across chunks a lax.scan carries the
+(heads, head_dim, d_state) SSM state — the same intra/inter two-level
+scan shape as the paper's Alg. 7, one level up.  Single-token decode is
+the bare recurrence on a carried state (O(1) in context length — this is
+why the ssm/hybrid archs run the long_500k shape natively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import linear, linear_init, truncated_normal
+from .sharding import constrain
+
+Array = jax.Array
+
+
+def _inv_softplus(x):
+    return x + jnp.log(-jnp.expm1(-x))
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    conv_ch = di + 2 * ns
+    dt = jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32,
+                                    np.log(1e-3), np.log(1e-1)))
+    a_init = jax.random.uniform(ks[4], (nh,), jnp.float32, 1.0, 16.0)
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * di + 2 * ns + nh),
+        "conv_w": truncated_normal(ks[1], (cfg.conv_width, conv_ch),
+                                   conv_ch ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(a_init),
+        "dt_bias": _inv_softplus(dt),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": linear_init(ks[2], di, d,
+                                std=di ** -0.5
+                                / max(2 * cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ns), dtype),
+        "ssm": jnp.zeros((batch, nh, hd, ns), jnp.float32),
+    }
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width W.  xbc: (B,S,C); state: (B,W-1,C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    out = sum(xp[:, i: i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(W))
+    out = out + b.astype(xbc.dtype)
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _segsum(a):
+    """a: (..., Q) → (..., Q, Q) with [i,j] = sum_{k=j+1..i} a_k (i≥j)."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xdt, a, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD.  xdt: (B,S,H,P) (inputs pre-scaled by dt),
+    a: (B,S,H) log-decay (=dt·A, negative), Bm/Cm: (B,S,N) shared across
+    heads (single group).  Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, h, p = xdt.shape
+    n = Bm.shape[-1]
+    Q = min(chunk, s)
+    pad = (-s) % Q
+    if pad:
+        # a=0 pads: chunk decay exp(0)=1 and zero input — the carried
+        # state passes through unchanged and padded outputs are trimmed.
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    nc = s_p // Q
+    xc = xdt.reshape(b, nc, Q, h, p)
+    ac = a.reshape(b, nc, Q, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, Q, n)
+    Cc = Cm.reshape(b, nc, Q, n)
+
+    acum = jnp.cumsum(ac, axis=2)                        # (b,nc,Q,h)
+    L = jnp.exp(_segsum(ac.swapaxes(2, 3)))              # (b,nc,h,Q,Q)
+
+    # intra-chunk (dual quadratic form)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        scores, L, xc.astype(jnp.float32))
+
+    # chunk-final states
+    decay_states = jnp.exp(acum[:, :, -1:, :] - acum)    # (b,nc,Q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(acum[:, :, -1, :])             # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, args):
+        st, dec = args                                   # (b,h,p,n),(b,h)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                        # (b,nc,h,p,n)
+
+    # off-diagonal (carried state) contribution
+    out_decay = jnp.exp(acum)                             # (b,nc,Q,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc.astype(jnp.float32), hprevs, out_decay)
+    y = (y_diag + y_off).reshape(b, s_p, h, p)[:, :s]
+    return y, hlast
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, *, cache: dict | None = None):
+    """One Mamba-2 mixer.  x: (B,S,d).  Returns (y, new_cache).
+
+    Training/prefill: cache=None (or a fresh cache to fill, S ≥ 1).
+    Decode: S == 1 with a carried cache.
+    """
+    B, S, d = x.shape
+    dt_ = x.dtype
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    proj = linear(p["in_proj"], x, dt_)
+    z, xi, Bm, Cm, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+    xbc = constrain(jnp.concatenate([xi, Bm, Cm], axis=-1), "dp", None, "tp")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                              # (nh,)
+    a = dt * A                                            # log decay
+    xh = constrain(xi.reshape(B, S, nh, hd), "dp", None, "tp", None)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    if cache is not None and S == 1:
+        # bare recurrence
+        h0 = cache["ssm"]
+        dec = jnp.exp(a[:, 0, :])                         # (B,nh)
+        upd = jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                         xdt[:, 0])
+        hnew = h0 * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       hnew)[:, None]                     # (B,1,nh,hd)
+        new_cache = {"conv": new_conv, "ssm": hnew}
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, hlast = _ssd_chunked(xdt, a, Bm, Cm, cfg.ssd_chunk, h0)
+        new_cache = None if cache is None else {"conv": new_conv,
+                                                "ssm": hlast}
+
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(dt_)
+    # gated RMS norm
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"]["scale"]).astype(dt_)
+    out = constrain(linear(p["out_proj"], g, dt_), "dp", None, None)
+    return out, new_cache

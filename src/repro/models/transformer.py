@@ -1,0 +1,475 @@
+"""Model stacks for all assigned families.
+
+Layer parameters are *stacked* along a leading L axis and consumed with
+``lax.scan`` (small HLO, fast compile, natural remat boundary).  Families
+with heterogeneous layers split into homogeneous stacked groups:
+
+  dense / vlm   : [L × (attn + mlp)]
+  moe           : [first_dense × (attn + mlp)] + [rest × (attn + moe)]
+  ssm           : [L × mamba2]
+  hybrid        : [(L/k groups) × (k × mamba2)] + one *shared* attn+mlp
+                  block applied after every group (Zamba2-style weight
+                  sharing; see DESIGN.md §Arch-applicability)
+  audio         : encoder [Lenc × (attn + mlp, non-causal)] +
+                  decoder [L × (self-attn + cross-attn + mlp)], conv
+                  frontend stubbed (precomputed frame embeddings)
+
+Public entry points (used by launch/, examples/, tests/):
+  init_params(cfg, key)            — pure; jax.eval_shape-able
+  loss_fn(params, batch, cfg)      — next-token CE (+ MoE aux)
+  init_cache(cfg, batch, max_len)  — decode cache pytree
+  prefill(params, batch, cfg, cache)   — logits + filled cache
+  decode_step(params, tokens, cfg, cache, cur_len) — one token
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_apply, attn_cache_init, attn_init
+from .config import ModelConfig
+from .layers import embed, embed_init, linear, linear_init, rmsnorm, \
+    rmsnorm_init, softmax_xent, truncated_normal
+from .mlp import mlp_apply, mlp_init
+from .moe import moe_apply, moe_init
+from .ssm import mamba2_apply, mamba2_cache_init, mamba2_init
+from .sharding import constrain
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sparse_kw(cfg: ModelConfig) -> dict:
+    if cfg.attn_pattern == "ddm_window" and cfg.window > 0:
+        return {"window": cfg.window,
+                "sink": cfg.n_sink_blocks * cfg.block_kv}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# homogeneous layer bodies
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn_init(k1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "mlp": mlp_init(k2, cfg)}
+
+
+def _dense_layer_apply(p, x, cfg, *, positions, cache=None, cur_len=0,
+                       causal=True, **sparse):
+    x = constrain(x, "dp", "tpseq", None)
+    a, cache = attn_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cfg, positions=positions, cache=cache,
+                          cur_len=cur_len, causal=causal, **sparse)
+    x = x + a
+    x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def _moe_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn_init(k1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "moe": moe_init(k2, cfg)}
+
+
+def _moe_layer_apply(p, x, cfg, *, positions, cache=None, cur_len=0,
+                     causal=True, **sparse):
+    x = constrain(x, "dp", "tpseq", None)
+    a, cache = attn_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cfg, positions=positions, cache=cache,
+                          cur_len=cur_len, causal=causal, **sparse)
+    x = x + a
+    y, aux = moe_apply(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + y, cache, aux
+
+
+def _mamba_layer_init(key, cfg: ModelConfig):
+    return {"ln": rmsnorm_init(cfg.d_model), "mixer": mamba2_init(key, cfg)}
+
+
+def _mamba_layer_apply(p, x, cfg, *, cache=None):
+    x = constrain(x, "dp", "tpseq", None)
+    y, cache = mamba2_apply(p["mixer"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                            cfg, cache=cache)
+    return x + y, cache
+
+
+def _stacked(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    ks = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+               "final_norm": rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(ks[1], cfg.d_model, cfg.vocab)
+
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stacked(lambda k: _dense_layer_init(k, cfg),
+                               ks[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            p["dense_layers"] = _stacked(
+                lambda k: _dense_layer_init(k, cfg), ks[2], nd)
+        p["moe_layers"] = _stacked(
+            lambda k: _moe_layer_init(k, cfg), ks[3], cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        p["layers"] = _stacked(lambda k: _mamba_layer_init(k, cfg),
+                               ks[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        groups = cfg.n_layers // per
+        keys = jax.random.split(ks[2], groups)
+        p["mamba_groups"] = jax.vmap(
+            lambda k: _stacked(lambda kk: _mamba_layer_init(kk, cfg),
+                               k, per))(keys)
+        p["shared_block"] = _dense_layer_init(ks[3], cfg)
+    elif cfg.family == "audio":
+        p["enc_pos"] = truncated_normal(ks[4], (cfg.enc_frames,
+                                                cfg.d_model), 0.02)
+        p["enc_layers"] = _stacked(lambda k: _dense_layer_init(k, cfg),
+                                   ks[2], cfg.enc_layers)
+        p["dec_layers"] = _stacked(lambda k: _decoder_layer_init(k, cfg),
+                                   ks[3], cfg.n_layers)
+        p["enc_norm"] = rmsnorm_init(cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def _decoder_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn_init(k1, cfg),
+            "lnx": rmsnorm_init(cfg.d_model), "xattn": attn_init(k2, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "mlp": mlp_init(k3, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill / decode share one path per family)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _scan_layers(layer_fn, stacked_params, x, caches, cfg: ModelConfig):
+    """Scan a homogeneous stacked group. layer_fn(p, x, cache) ->
+    (x, cache, aux)."""
+    if cfg.unroll_layers:
+        # cost-probe mode: XLA cost_analysis counts a while-loop body
+        # once regardless of trip count, so probes unroll (launch/dryrun)
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        aux = jnp.float32(0.0)
+        new_caches = []
+        for i in range(n):
+            pl = jax.tree.map(lambda a: a[i], stacked_params)
+            cl = None if caches is None else jax.tree.map(
+                lambda a: a[i], caches)
+            x, cl, a = layer_fn(pl, x, cl)
+            aux = aux + a
+            new_caches.append(cl)
+        if caches is None:
+            return x, None, aux
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *new_caches), aux
+    if caches is None:
+        def body(carry, pl):
+            xx, aux = carry
+            xx, _, a = layer_fn(pl, xx, None)
+            return (xx, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg),
+                                   (x, jnp.float32(0.0)), stacked_params)
+        return x, None, aux
+
+    def body(carry, xs):
+        xx, aux = carry
+        pl, cl = xs
+        xx, cl, a = layer_fn(pl, xx, cl)
+        return (xx, aux + a), cl
+
+    (x, aux), new_caches = jax.lax.scan(
+        _maybe_remat(body, cfg), (x, jnp.float32(0.0)),
+        (stacked_params, caches))
+    return x, new_caches, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, caches=None, cur_len=0,
+            frames=None, return_features=False):
+    """Logits for a token slab.  tokens: (B, S) int32.
+
+    ``caches``: None (training) or the cache pytree (prefill/decode —
+    written at [cur_len, cur_len+S)).  ``frames``: (B, F, d) precomputed
+    frame/patch embeddings for the audio/vlm frontends (stub).
+    ``return_features``: skip the LM head (training uses chunked CE).
+    Returns (logits_f32 (B,S,vocab) | features, new_caches, aux_loss).
+    """
+    dt = _dtype(cfg)
+    B, S = tokens.shape
+    x = constrain(embed(params["embed"], tokens, dt), "dp", None, None)
+    positions = cur_len + jnp.arange(S)
+    sparse = _sparse_kw(cfg)
+    aux_total = jnp.float32(0.0)
+    new_caches = {} if caches is not None else None
+
+    def attach(name, val):
+        if new_caches is not None:
+            new_caches[name] = val
+
+    if cfg.family in ("dense", "vlm"):
+        def lf(p, x, c):
+            x, c = _dense_layer_apply(p, x, cfg, positions=positions,
+                                      cache=c, cur_len=cur_len, **sparse)
+            return x, c, jnp.float32(0.0)
+        x, nc, aux = _scan_layers(
+            lf, params["layers"], x,
+            None if caches is None else caches["layers"], cfg)
+        aux_total += aux
+        attach("layers", nc)
+
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            def lfd(p, x, c):
+                x, c = _dense_layer_apply(p, x, cfg, positions=positions,
+                                          cache=c, cur_len=cur_len,
+                                          **sparse)
+                return x, c, jnp.float32(0.0)
+            x, nc, _ = _scan_layers(
+                lfd, params["dense_layers"], x,
+                None if caches is None else caches["dense_layers"], cfg)
+            attach("dense_layers", nc)
+
+        def lfm(p, x, c):
+            x, c, aux = _moe_layer_apply(p, x, cfg, positions=positions,
+                                         cache=c, cur_len=cur_len, **sparse)
+            return x, c, aux
+        x, nc, aux = _scan_layers(
+            lfm, params["moe_layers"], x,
+            None if caches is None else caches["moe_layers"], cfg)
+        aux_total += aux
+        attach("moe_layers", nc)
+
+    elif cfg.family == "ssm":
+        def lf(p, x, c):
+            x, c = _mamba_layer_apply(p, x, cfg, cache=c)
+            return x, c, jnp.float32(0.0)
+        x, nc, _ = _scan_layers(
+            lf, params["layers"], x,
+            None if caches is None else caches["layers"], cfg)
+        attach("layers", nc)
+
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        mg = params["mamba_groups"]
+        mcaches = None if caches is None else caches["mamba_groups"]
+        acaches = None if caches is None else caches["attn"]
+        new_m, new_a = [], []
+        for g in range(groups):
+            gp = jax.tree.map(lambda a: a[g], mg)
+            gc = None if mcaches is None else jax.tree.map(
+                lambda a: a[g], mcaches)
+
+            def lf(p, x, c):
+                x, c = _mamba_layer_apply(p, x, cfg, cache=c)
+                return x, c, jnp.float32(0.0)
+            x, nc, _ = _scan_layers(lf, gp, x, gc, cfg)
+            ac = None if acaches is None else jax.tree.map(
+                lambda a: a[g], acaches)
+            shared_apply = _maybe_remat(
+                lambda pp, xx, cc: _dense_layer_apply(
+                    pp, xx, cfg, positions=positions, cache=cc,
+                    cur_len=cur_len, **sparse), cfg)
+            x, ac = shared_apply(params["shared_block"], x, ac)
+            new_m.append(nc)
+            new_a.append(ac)
+        if caches is not None:
+            attach("mamba_groups",
+                   jax.tree.map(lambda *a: jnp.stack(a), *new_m))
+            attach("attn", jax.tree.map(lambda *a: jnp.stack(a), *new_a))
+
+    elif cfg.family == "audio":
+        # frames present => run the encoder (training / prefill);
+        # frames absent  => reuse the cached encoder output (decode).
+        if frames is not None:
+            F = frames.shape[1]
+            enc = frames.astype(dt) + params["enc_pos"][None, :F].astype(dt)
+            enc_pos = jnp.arange(F)
+
+            def ef(p, x, c):
+                x, _ = _dense_layer_apply(p, x, cfg, positions=enc_pos,
+                                          cache=None, causal=False)
+                return x, c, jnp.float32(0.0)
+            enc, _, _ = _scan_layers(ef, params["enc_layers"], enc,
+                                     None, cfg)
+            enc = rmsnorm(params["enc_norm"], enc, cfg.norm_eps)
+        else:
+            assert caches is not None and "enc_out" in caches, \
+                "audio decode needs a prefed encoder cache"
+            enc = caches["enc_out"].astype(dt)
+        attach("enc_out", enc.astype(dt))
+
+        def df(p, x, c):
+            a, c = attn_apply(p["attn"],
+                              rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                              positions=positions, cache=c,
+                              cur_len=cur_len, **sparse)
+            x = x + a
+            xq = rmsnorm(p["lnx"], x, cfg.norm_eps)
+            a2, _ = _cross_attn(p["xattn"], xq, enc, cfg)
+            x = x + a2
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x, c, jnp.float32(0.0)
+        x, nc, _ = _scan_layers(
+            df, params["dec_layers"], x,
+            None if caches is None else caches["dec_layers"], cfg)
+        attach("dec_layers", nc)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_features:
+        return x, new_caches, aux_total
+    logits = _project_logits(params, x, cfg)
+    return logits, new_caches, aux_total
+
+
+def _project_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"]["table"].T.astype(
+            jnp.float32)
+    else:
+        logits = linear(params["lm_head"], x, jnp.float32)
+    return constrain(logits.astype(jnp.float32), "dp", None, "tp")
+
+
+def _cross_attn(p, xq, enc, cfg: ModelConfig):
+    """Cross attention: queries from decoder, K/V from encoder output."""
+    B, S, _ = xq.shape
+    F = enc.shape[1]
+    dh = cfg.d_head
+    dt = xq.dtype
+    from .layers import linear as lin
+    q = lin(p["wq"], xq, dt).reshape(B, S, cfg.n_heads, dh)
+    k = lin(p["wk"], enc, dt).reshape(B, F, cfg.n_kv_heads, dh)
+    v = lin(p["wv"], enc, dt).reshape(B, F, cfg.n_kv_heads, dh)
+    g = cfg.n_heads // cfg.n_kv_heads
+    from .attention import chunked_sdpa
+    out = chunked_sdpa(q.reshape(B, S, cfg.n_kv_heads, g, dh), k, v,
+                       jnp.arange(S), F, causal=False,
+                       q_chunk=cfg.q_chunk)
+    return lin(p["wo"], out.reshape(B, S, -1), dt), None
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    dt = _dtype(cfg)
+
+    def attn_stack(n):
+        one = attn_cache_init(cfg, batch, max_len, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+
+    def mamba_stack(n):
+        one = mamba2_cache_init(cfg, batch, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": attn_stack(cfg.n_layers)}
+    if cfg.family == "moe":
+        c = {"moe_layers": attn_stack(cfg.n_layers
+                                      - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            c["dense_layers"] = attn_stack(cfg.first_dense_layers)
+        return c
+    if cfg.family == "ssm":
+        return {"layers": mamba_stack(cfg.n_layers)}
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        one = mamba2_cache_init(cfg, batch, dt)
+        mg = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (groups, per) + a.shape).copy(), one)
+        return {"mamba_groups": mg, "attn": attn_stack(groups)}
+    if cfg.family == "audio":
+        return {"dec_layers": attn_stack(cfg.n_layers),
+                "enc_out": jnp.zeros((batch, cfg.enc_frames, cfg.d_model),
+                                     dt)}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: {"tokens": (B, S+1)} (+ "frames" for audio).
+
+    Cross entropy runs in sequence chunks (``cfg.ce_chunk``) under remat
+    so the (B, S, vocab) fp32 logits are never alive at once — the
+    vocabulary projection dominates activation memory otherwise.
+    """
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    feats, _, aux = forward(params, inputs, cfg,
+                            frames=batch.get("frames"),
+                            return_features=True)
+    B, S, d = feats.shape
+    C = min(cfg.ce_chunk, S)
+    pad = (-S) % C
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = feats.shape[1] // C
+    fc = feats.reshape(B, nch, C, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nch, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(xc, yc):
+        logits = _project_logits(params, xc, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        valid = (yc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        t, c = chunk_loss(*xs)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (fc, lc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, frames=None):
+    logits, cache, _ = forward(params, tokens, cfg, caches=cache,
+                               cur_len=0, frames=frames)
+    return logits[:, -1], cache
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache, cur_len,
+                frames=None):
+    """tokens: (B, 1); cur_len: scalar int32 — current cache fill."""
+    logits, cache, _ = forward(params, tokens, cfg, caches=cache,
+                               cur_len=cur_len, frames=frames)
+    return logits[:, -1], cache

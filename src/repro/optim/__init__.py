@@ -1,0 +1,9 @@
+"""Optimizer substrate (no external deps): AdamW + schedule + clipping +
+optional int8 gradient compression for cross-pod all-reduce."""
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    cosine_schedule, global_norm, clip_by_global_norm)
+from .compress import compress_int8, decompress_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm", "compress_int8",
+           "decompress_int8"]

@@ -1,0 +1,47 @@
+"""int8 stochastic-rounding gradient compression.
+
+Distributed-optimization trick for the slow cross-pod hop: gradients are
+quantized to int8 with a per-tensor scale before the inter-pod
+all-reduce and dequantized after, cutting inter-pod bytes 4× (fp32) /
+2× (bf16).  Stochastic rounding keeps the quantizer unbiased
+(E[q] = x), so SGD-style convergence guarantees survive; the intra-pod
+reduction stays full precision.
+
+Used by ``launch.train`` when ``--compress-grads`` is set: grads are
+psum'd over the in-pod axes in fp32, compressed, psum'd over the 'pod'
+axis in int8 (values summed as int32 to avoid saturation), then
+dequantized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x, key):
+    """Returns (q int8, scale f32). Unbiased via stochastic rounding."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    y = xf / scale
+    lo = jnp.floor(y)
+    frac = y - lo
+    rnd = jax.random.uniform(key, x.shape)
+    q = lo + (rnd < frac)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, key):
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales = zip(*(compress_int8(l, k) for l, k in zip(leaves, keys)))
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(decompress_int8, qs, scales)

@@ -1,0 +1,127 @@
+"""Fault-tolerant training runtime.
+
+Design (DESIGN.md §5, 1000+ node posture):
+  * periodic async sharded checkpoints (atomic rename — a torn write can
+    never be restored);
+  * restart = restore latest checkpoint + replay the deterministic data
+    pipeline from that step: the combination makes a failed run
+    *bit-identical* to an uninterrupted one (asserted in tests);
+  * failure injection hooks simulate node loss at arbitrary steps;
+  * straggler/elastic posture: data shards are pure functions of
+    (seed, step, host) — a replaced host needs no coordinator handshake,
+    and re-scaling re-partitions the host index space (checkpoint
+    restore reshards via the DDM plan in checkpoint.sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from ..checkpoint.sharded import AsyncSaver, latest_step, restore, save
+from ..data.pipeline import DataConfig, SyntheticTokens
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / chaos drills)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 5
+    n_ckpt_shards: int = 1
+    async_ckpt: bool = False
+    log_every: int = 1
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig, data_cfg: DataConfig,
+                 seed: int = 0):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = SyntheticTokens(data_cfg)
+        self._seed = seed
+        self._saver = AsyncSaver()
+        self._step_fn = jax.jit(self._make_step())
+
+    def _make_step(self):
+        mcfg, ocfg = self.model_cfg, self.opt_cfg
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(p, batch, mcfg), has_aux=True)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 ocfg)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+
+        return step
+
+    def init_state(self):
+        params = T.init_params(self.model_cfg, jax.random.PRNGKey(
+            self._seed))
+        return params, adamw_init(params)
+
+    # -- one contiguous attempt (may die on injected failure) -------------
+    def run(self, n_steps: int, *,
+            failure_at: int | None = None,
+            on_step: Callable[[int, dict], None] | None = None):
+        params, opt_state = self.init_state()
+        start = 0
+        last = latest_step(self.tcfg.ckpt_dir)
+        if last is not None:
+            state = restore(self.tcfg.ckpt_dir, last,
+                            {"params": params, "opt": opt_state},
+                            n_shards_new=self.tcfg.n_ckpt_shards)
+            params, opt_state = state["params"], state["opt"]
+            start = last
+        metrics = {}
+        for step in range(start, n_steps):
+            if failure_at is not None and step == failure_at:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            batch = {"tokens": self.data.global_batch(step)}
+            if self.model_cfg.family == "audio":
+                rng = np.random.default_rng(step)
+                batch["frames"] = rng.normal(size=(
+                    self.data.cfg.global_batch, self.model_cfg.enc_frames,
+                    self.model_cfg.d_model)).astype(np.float32) * 0.1
+            params, opt_state, metrics = self._step_fn(params, opt_state,
+                                                       batch)
+            done = step + 1
+            if done % self.tcfg.ckpt_every == 0 or done == n_steps:
+                tree = {"params": params, "opt": opt_state}
+                if self.tcfg.async_ckpt:
+                    self._saver.save(self.tcfg.ckpt_dir, done, tree,
+                                     n_shards=self.tcfg.n_ckpt_shards)
+                else:
+                    save(self.tcfg.ckpt_dir, done, tree,
+                         n_shards=self.tcfg.n_ckpt_shards)
+            if on_step is not None:
+                on_step(step, metrics)
+        self._saver.wait()
+        return params, opt_state, metrics
+
+    # -- supervised attempts with restart ---------------------------------
+    def run_resilient(self, n_steps: int, *, failures: tuple[int, ...] = (),
+                      max_restarts: int = 8, on_step=None):
+        """Run to completion, restarting from the latest checkpoint after
+        each injected failure (the restart path real node loss takes)."""
+        pending = list(failures)
+        for _ in range(max_restarts + 1):
+            try:
+                fail_at = pending[0] if pending else None
+                out = self.run(n_steps, failure_at=fail_at,
+                               on_step=on_step)
+                return out
+            except SimulatedFailure:
+                pending.pop(0)
+                continue
+        raise RuntimeError("exceeded max_restarts")

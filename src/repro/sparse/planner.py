@@ -1,0 +1,110 @@
+"""DDM-planned block-sparse attention layout.
+
+This is the paper's service applied inside the LM framework: each query
+block *subscribes* to the key range it may attend to (causal sliding
+window + global sink prefix), each KV block is an *update region*; the
+block-level attention layout is exactly the set of overlapping
+(subscription, update) pairs — computed by ``repro.core`` matching, the
+same code path as the HLA pub/sub benchmarks.
+
+Outputs:
+  * ``block_bitmask``  — (nq, nkv) bool, consumed by tests/reference;
+  * ``block_windows``  — per-q-block contiguous [start, end) token ranges
+    (+ sink prefix end), consumed by the Pallas kernel and by the decode
+    cache read;
+the two are provably consistent (tests assert bitmask == windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import Regions, block_mask, match_pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    seq_len: int
+    block_q: int
+    block_kv: int
+    window: int
+    sink_blocks: int
+
+    @property
+    def nq(self) -> int:
+        return -(-self.seq_len // self.block_q)
+
+    @property
+    def nkv(self) -> int:
+        return -(-self.seq_len // self.block_kv)
+
+    @property
+    def sink_end(self) -> int:
+        return self.sink_blocks * self.block_kv
+
+
+def _q_subscriptions(plan: BlockPlan) -> Regions:
+    """Query block i subscribes to keys [max(0, end_i - window), end_i)."""
+    i = np.arange(plan.nq, dtype=np.float32)
+    end = np.minimum((i + 1) * plan.block_q, plan.seq_len)
+    start = np.maximum(end - plan.window, 0.0)
+    return Regions(jnp.asarray(start)[:, None], jnp.asarray(end)[:, None])
+
+
+def _kv_updates(plan: BlockPlan) -> Regions:
+    j = np.arange(plan.nkv, dtype=np.float32)
+    lo = j * plan.block_kv
+    hi = np.minimum((j + 1) * plan.block_kv, plan.seq_len)
+    return Regions(jnp.asarray(lo)[:, None], jnp.asarray(hi)[:, None])
+
+
+def block_bitmask(plan: BlockPlan) -> np.ndarray:
+    """(nq, nkv) bool via DDM interval matching + sink columns."""
+    S = _q_subscriptions(plan)
+    U = _kv_updates(plan)
+    mask = np.array(block_mask(S.lo[:, 0], S.hi[:, 0],
+                               U.lo[:, 0], U.hi[:, 0]))
+    mask[:, : plan.sink_blocks] = True
+    # causality at block granularity: kv block start < q block end
+    j_lo = np.arange(plan.nkv) * plan.block_kv
+    i_end = np.minimum((np.arange(plan.nq) + 1) * plan.block_q,
+                       plan.seq_len)
+    mask &= j_lo[None, :] < i_end[:, None]
+    return mask
+
+
+def block_windows(plan: BlockPlan):
+    """Per-q-block contiguous kv token ranges (starts, ends) int32 (nq,).
+
+    Derived from the DDM pair enumeration (not re-derived arithmetic):
+    enumerate (q-block, kv-block) matches with ``core.match_pairs``,
+    reduce each q row to its [min, max] matched kv block.  The sink
+    prefix is carried separately (``plan.sink_end``).
+    """
+    S = _q_subscriptions(plan)
+    U = _kv_updates(plan)
+    cap = int(plan.nq * (plan.window // plan.block_kv + 3))
+    pairs, count = match_pairs(S, U, max_pairs=cap, algo="sbm")
+    pairs = np.asarray(pairs)
+    pairs = pairs[pairs[:, 0] >= 0]
+    assert int(count) <= cap, "window plan overflow"
+    starts = np.full(plan.nq, np.iinfo(np.int32).max, np.int64)
+    ends = np.zeros(plan.nq, np.int64)
+    np.minimum.at(starts, pairs[:, 0], pairs[:, 1] * plan.block_kv)
+    np.maximum.at(ends, pairs[:, 0], (pairs[:, 1] + 1) * plan.block_kv)
+    # causal clip to the q block's own end, and clip to seq_len
+    i_end = np.minimum((np.arange(plan.nq) + 1) * plan.block_q,
+                       plan.seq_len)
+    ends = np.minimum(np.minimum(ends, plan.seq_len), i_end)
+    starts = np.minimum(starts, ends)
+    return starts.astype(np.int32), ends.astype(np.int32)
+
+
+def decode_window(pos: int, plan: BlockPlan) -> tuple[int, int]:
+    """Decode-time read range for a query at absolute position ``pos``:
+    [max(sink_end, pos+1-window), pos+1) plus the [0, sink_end) prefix."""
+    end = pos + 1
+    start = max(end - plan.window, 0)
+    return start, end

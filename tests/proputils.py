@@ -1,0 +1,57 @@
+"""Tiny property-testing harness (hypothesis is not installed offline).
+
+``cases()`` generates deterministic randomized instances across a seed
+sweep; failures report the generating seed so they replay exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def interval_cases(n_cases: int = 25, max_n: int = 400, max_m: int = 400,
+                   d: int = 1, seed0: int = 1234):
+    """Yield (seed, s_lo, s_hi, u_lo, u_hi) randomized instances.
+
+    Mix of regimes: dense overlap, sparse, duplicated coordinates
+    (integer grids — tie-handling stress), tiny and degenerate-but-valid
+    (length epsilon) intervals.
+    """
+    for case in range(n_cases):
+        seed = seed0 + case
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, max_n))
+        m = int(rng.integers(1, max_m))
+        regime = case % 5
+        if regime == 0:      # uniform floats, medium overlap
+            space, length = 100.0, rng.uniform(0.5, 10.0)
+        elif regime == 1:    # sparse
+            space, length = 10000.0, rng.uniform(0.01, 0.5)
+        elif regime == 2:    # dense
+            space, length = 10.0, rng.uniform(1.0, 8.0)
+        elif regime == 3:    # integer endpoints => many exact ties
+            s_lo = rng.integers(0, 50, (n, d)).astype(np.float32)
+            s_hi = s_lo + rng.integers(1, 8, (n, d)).astype(np.float32)
+            u_lo = rng.integers(0, 50, (m, d)).astype(np.float32)
+            u_hi = u_lo + rng.integers(1, 8, (m, d)).astype(np.float32)
+            yield seed, s_lo, s_hi, u_lo, u_hi
+            continue
+        else:                # mixed lengths incl. near-degenerate
+            space = 100.0
+            s_lo = rng.uniform(0, space, (n, d)).astype(np.float32)
+            s_hi = s_lo + rng.uniform(1e-3, 20.0, (n, d)).astype(np.float32)
+            u_lo = rng.uniform(0, space, (m, d)).astype(np.float32)
+            u_hi = u_lo + rng.uniform(1e-3, 20.0, (m, d)).astype(np.float32)
+            yield seed, s_lo, s_hi, u_lo, u_hi
+            continue
+        s_lo = rng.uniform(0, space, (n, d)).astype(np.float32)
+        s_hi = (s_lo + length).astype(np.float32)
+        u_lo = rng.uniform(0, space, (m, d)).astype(np.float32)
+        u_hi = (u_lo + length).astype(np.float32)
+        yield seed, s_lo, s_hi, u_lo, u_hi
+
+
+def oracle_mask(s_lo, s_hi, u_lo, u_hi):
+    """Numpy oracle: half-open d-rectangle overlap mask (n, m)."""
+    ok = np.logical_and(s_lo[:, None, :] < u_hi[None, :, :],
+                        u_lo[None, :, :] < s_hi[:, None, :])
+    return ok.all(axis=-1)

@@ -1,0 +1,111 @@
+"""Checkpointing (atomic, sharded, elastic reshard) + fault-tolerant
+training runtime.
+
+Key property: a run with injected node failures + restarts is
+*bit-identical* to an uninterrupted run — deterministic data pipeline ×
+atomic checkpoints × pure train step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.sharded import (AsyncSaver, latest_step, restore,
+                                      save)
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (13, 5)),
+            "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                       "c": jax.random.normal(k, (4, 3, 2))},
+            "scalar": jnp.float32(3.25)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    save(tmp_path, 3, tree, n_shards=1)
+    assert latest_step(tmp_path) == 3
+    out = restore(tmp_path, 3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Save with P shards, restore with P' — the DDM-planned transfer."""
+    tree = _tree()
+    for p_old, p_new in [(4, 3), (3, 4), (1, 5), (5, 1), (2, 2)]:
+        d = tmp_path / f"{p_old}_{p_new}"
+        save(d, 1, tree, n_shards=p_old)
+        out = restore(d, 1, tree, n_shards_new=p_new)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_saver(tmp_path):
+    tree = _tree()
+    s = AsyncSaver()
+    s.save(tmp_path, 7, tree)
+    s.wait()
+    out = restore(tmp_path, 7, tree)
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(out["a"]))
+
+
+def test_data_pipeline_deterministic_and_host_sharded():
+    cfg = DataConfig(vocab=101, seq_len=16, global_batch=8, seed=5,
+                     n_hosts=4)
+    pipe = SyntheticTokens(cfg)
+    b1 = pipe.global_batch(3)
+    b2 = pipe.global_batch(3)
+    np.testing.assert_array_equal(b1, b2)          # deterministic
+    assert b1.shape == (8, 17)
+    # host shards are disjoint parts of the global batch
+    h0 = pipe.batch(3, 0)
+    np.testing.assert_array_equal(b1[:2], h0)
+    assert not np.array_equal(pipe.batch(3, 0), pipe.batch(3, 1))
+    assert not np.array_equal(pipe.batch(3, 0), pipe.batch(4, 0))
+
+
+def _mk_trainer(tmp_path, ckpt_every=2):
+    mcfg = dataclasses.replace(get_smoke_config("qwen2_0_5b"),
+                               remat=False)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every)
+    dcfg = DataConfig(vocab=mcfg.vocab, seq_len=16, global_batch=4)
+    return Trainer(mcfg, ocfg, tcfg, dcfg)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _mk_trainer(tmp_path)
+    losses = []
+    tr.run(8, on_step=lambda s, m: losses.append(float(m["loss"])))
+    assert losses[-1] < losses[0]
+
+
+def test_failure_restart_is_bit_identical(tmp_path):
+    """Crash at step 5, restart from ckpt → same final params as a
+    straight run (the fault-tolerance contract)."""
+    tr1 = _mk_trainer(tmp_path / "a", ckpt_every=2)
+    p1, o1, m1 = tr1.run(7)
+
+    tr2 = _mk_trainer(tmp_path / "b", ckpt_every=2)
+    p2, o2, m2 = tr2.run_resilient(7, failures=(5,))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m1["loss"]) == float(m2["loss"])
+
+
+def test_double_failure_restart(tmp_path):
+    tr1 = _mk_trainer(tmp_path / "a", ckpt_every=3)
+    p1, _, _ = tr1.run(9)
+    tr2 = _mk_trainer(tmp_path / "b", ckpt_every=3)
+    p2, _, _ = tr2.run_resilient(9, failures=(4, 8))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,102 @@
+"""Assigned-config fidelity (exact values from the assignment table) +
+partitioning rule unit tests."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ALIASES, ARCHS, SHAPES, get_config
+from repro.launch import partition as pt
+
+EXPECT = {
+    "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14,
+                       n_kv_heads=2, d_ff=4864, vocab=151936,
+                       qkv_bias=True),
+    "llama3.2-3b": dict(n_layers=28, d_model=3072, n_heads=24,
+                        n_kv_heads=8, d_ff=8192, vocab=128256),
+    "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+                  d_ff=11008, vocab=64000),
+    "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40,
+                      n_kv_heads=8, d_ff=17408, vocab=151936,
+                      qk_norm=True),
+    "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                        n_kv_heads=32, d_ff=10240, vocab=32000,
+                        ssm_state=64),
+    "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             vocab=102400, n_experts=160, top_k=6,
+                             n_shared_experts=2, moe_d_ff=1536,
+                             kv_lora=512),
+    "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                 n_kv_heads=8, vocab=32064,
+                                 n_experts=16, top_k=2, moe_d_ff=6400),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=22016, vocab=65536),
+    "mamba2-780m": dict(n_layers=48, d_model=1536, vocab=50280,
+                        ssm_state=128),
+    "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16,
+                           n_kv_heads=16, d_ff=4096, vocab=51865,
+                           enc_layers=24),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_config_matches_assignment(name):
+    cfg = get_config(name)
+    for k, v in EXPECT[name].items():
+        assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_all_archs_have_param_scale():
+    """n_params() lands in the right ballpark per the arch name."""
+    approx = {"qwen2-0.5b": 0.5e9, "llama3.2-3b": 3.2e9, "yi-9b": 8.8e9,
+              "qwen3-14b": 14e9, "zamba2-2.7b": 2.7e9,
+              "deepseek-v2-236b": 236e9, "phi3.5-moe-42b-a6.6b": 42e9,
+              "chameleon-34b": 34e9, "mamba2-780m": 0.78e9,
+              "whisper-medium": 0.76e9}
+    for name, want in approx.items():
+        got = get_config(name).n_params()
+        assert 0.5 * want < got < 1.7 * want, (name, got, want)
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_sanitize_drops_nondivisible_axes():
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1),
+                ("data", "model"))
+    # fake a 16-way model axis via a mesh-shaped dict
+    import types
+    m = types.SimpleNamespace(axis_names=("data", "model"),
+                              devices=np.empty((16, 16)))
+    spec = pt.sanitize(m, P("data", "model"), (32, 30))
+    assert spec == P("data", None)          # 30 % 16 != 0
+    spec = pt.sanitize(m, P(("data", "model"),), (256,))
+    assert spec == P(("data", "model"))
+    spec = pt.sanitize(m, P(("data", "model"),), (100,))
+    assert spec == P(None)
+
+
+def test_param_specs_rules():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("llama3_2_3b")
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = pt.param_specs(params)
+    flat = dict(
+        ("/".join(str(getattr(e, "key", e)) for e in path), s)
+        for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0])
+    assert flat["embed/table"] == P("model", "data")
+    assert flat["layers/attn/wq/w"] == P(None, "data", "model")
+    assert flat["layers/attn/wo/w"] == P(None, "model", "data")
+    assert flat["layers/mlp/w_down/w"] == P(None, "model", "data")
+    assert flat["lm_head/w"] == P("data", "model")
+    # norm scales replicate
+    assert flat["layers/ln1/scale"] == P()

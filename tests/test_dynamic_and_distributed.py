@@ -1,0 +1,77 @@
+"""Dynamic DDM service (paper §3) + multi-device SBM (paper §4).
+
+The distributed test re-execs in a subprocess with
+``--xla_force_host_platform_device_count=8`` so the main test process
+keeps the real single-device view (per launch policy, only dryrun.py and
+explicitly-distributed entry points fake the device count).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import paper_workload, DDMService, match_count, brute
+from repro.core.regions import Regions
+
+
+def test_dynamic_service_full_lifecycle():
+    S, U = paper_workload(seed=21, n_total=300, alpha=5.0)
+    svc = DDMService(S, U)
+    pairs = svc.connect()
+    assert len(pairs) == match_count(S, U, algo="bfm")
+
+    rng = np.random.default_rng(0)
+    for step in range(12):
+        kind = "sub" if step % 2 == 0 else "upd"
+        idx = int(rng.integers(0, 300 // 2))
+        lo = float(rng.uniform(0, 9e5))
+        hi = lo + float(rng.uniform(1.0, 5e3))
+        added, removed = svc.update_region(kind, idx, lo, hi)
+        assert not (added & removed)
+        # ledger always matches a from-scratch brute-force match
+        S2 = Regions(jnp.asarray(svc.s_lo)[:, None],
+                     jnp.asarray(svc.s_hi)[:, None])
+        U2 = Regions(jnp.asarray(svc.u_lo)[:, None],
+                     jnp.asarray(svc.u_hi)[:, None])
+        mask = np.asarray(brute.bfm_mask(S2, U2))
+        truth = {(int(a), int(b)) for a, b in zip(*np.nonzero(mask))}
+        assert svc.pairs == truth, f"step={step}"
+
+
+def test_dynamic_delta_is_local():
+    """Only pairs involving the moved region may change (paper §3: a
+    region update triggers at most O(m) new overlaps)."""
+    S, U = paper_workload(seed=22, n_total=200, alpha=10.0)
+    svc = DDMService(S, U)
+    svc.connect()
+    added, removed = svc.update_region("upd", 5, 10.0, 500.0)
+    assert all(u == 5 for _, u in added | removed)
+
+
+DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.core import paper_workload, match_count
+    from repro.core.distributed import distributed_sbm_count
+    for seed, n, a in [(0, 2000, 10.0), (1, 5000, 1.0), (2, 4096, 100.0),
+                       (3, 130, 0.01), (4, 999, 1.0)]:
+        S, U = paper_workload(seed=seed, n_total=n, alpha=a)
+        ref = match_count(S, U, algo="sbm")
+        got = distributed_sbm_count(S, U)
+        assert ref == got, (seed, ref, got)
+    print("DIST_OK")
+""")
+
+
+def test_distributed_sbm_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", DIST_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DIST_OK" in out.stdout

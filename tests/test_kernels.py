@@ -1,0 +1,80 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per the kernel contract: sweep shapes and dtypes, assert exact agreement
+(integer/boolean outputs — no tolerance needed; the attention kernel in
+test_sparse_attention.py uses allclose).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import paper_workload, make_regions, match_count
+from repro.kernels import ref
+from repro.kernels import bfm as bfm_k
+from repro.kernels import sbm_sweep as sweep_k
+from repro.kernels.ops import (bfm_count_pallas, bfm_mask_pallas,
+                               sbm_count_pallas)
+from repro.core.sbm import _endpoint_stream
+
+from proputils import interval_cases, oracle_mask
+
+
+@pytest.mark.parametrize("ts,tu", [(8, 128), (16, 16), (128, 256)])
+@pytest.mark.parametrize("d", [1, 2, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bfm_tile_counts_vs_ref(ts, tu, d, dtype):
+    rng = np.random.default_rng(ts * 1000 + tu + d)
+    n, m = ts * 3, tu * 2
+    s_lo = rng.uniform(0, 50, (n, d)).astype(np.float32)
+    s_hi = s_lo + rng.uniform(0.5, 10, (n, d)).astype(np.float32)
+    u_lo = rng.uniform(0, 50, (m, d)).astype(np.float32)
+    u_hi = u_lo + rng.uniform(0.5, 10, (m, d)).astype(np.float32)
+    args = [jnp.asarray(a, dtype) for a in (s_lo, s_hi, u_lo, u_hi)]
+    got = bfm_k.bfm_tile_counts(*args, ts=ts, tu=tu, interpret=True)
+    want = ref.bfm_tile_counts(*args, ts=ts, tu=tu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("ts,tu", [(8, 128), (64, 64)])
+def test_bfm_mask_vs_ref(ts, tu):
+    rng = np.random.default_rng(7)
+    n, m, d = ts * 2, tu * 3, 2
+    s_lo = rng.uniform(0, 30, (n, d)).astype(np.float32)
+    s_hi = s_lo + rng.uniform(0.5, 6, (n, d)).astype(np.float32)
+    u_lo = rng.uniform(0, 30, (m, d)).astype(np.float32)
+    u_hi = u_lo + rng.uniform(0.5, 6, (m, d)).astype(np.float32)
+    args = [jnp.asarray(a) for a in (s_lo, s_hi, u_lo, u_hi)]
+    got = bfm_k.bfm_mask(*args, ts=ts, tu=tu, interpret=True)
+    want = ref.bfm_mask(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_padding_matches_core():
+    """Wrapper handles non-multiple sizes with sentinel padding."""
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=6, d=1):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        want = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
+        got = bfm_count_pallas(S, U, ts=64, tu=64, interpret=True)
+        assert got == want, seed
+        mask = bfm_mask_pallas(S, U, ts=64, tu=64, interpret=True)
+        assert mask.shape == (S.n, U.n)
+        assert int(np.asarray(mask).sum()) == want, seed
+
+
+@pytest.mark.parametrize("block", [128, 512, 2048])
+def test_sbm_sweep_kernel_vs_ref(block):
+    S, U = paper_workload(seed=13, n_total=block * 2, alpha=20.0)
+    is_lo, is_upd = _endpoint_stream(S.lo[:, 0], S.hi[:, 0],
+                                     U.lo[:, 0], U.hi[:, 0])
+    got = sweep_k.sbm_sweep(is_lo, is_upd, block=block, interpret=True)
+    want = ref.sbm_sweep(is_lo, is_upd)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sbm_count_pallas_end_to_end():
+    for n_total, alpha in [(1000, 0.01), (2000, 1.0), (3000, 100.0)]:
+        S, U = paper_workload(seed=17, n_total=n_total, alpha=alpha)
+        want = match_count(S, U, algo="sbm")
+        got = sbm_count_pallas(S, U, block=512, interpret=True)
+        assert got == want, (n_total, alpha)

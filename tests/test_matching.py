@@ -1,0 +1,177 @@
+"""Core DDM matching: cross-algorithm agreement + property tests.
+
+The paper's central correctness requirement (§2): every overlapping
+(subscription, update) pair is reported exactly once.  We check all
+algorithm variants against a numpy brute-force oracle across randomized
+regimes (including exact-tie endpoint grids, which stress the half-open
+semantics and the hi-before-lo sweep ordering).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Regions, make_regions, match_count, match_pairs,
+                        paper_workload, koln_like_workload, pairs_to_set)
+from repro.core import sbm, itm, brute, grid
+
+from proputils import interval_cases, oracle_mask
+
+COUNT_ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
+PAIR_ALGOS = ("bfm", "sbm", "itm")
+
+
+def _regions(s_lo, s_hi, u_lo, u_hi):
+    return make_regions(s_lo, s_hi), make_regions(u_lo, u_hi)
+
+
+@pytest.mark.parametrize("algo", COUNT_ALGOS)
+def test_count_matches_oracle_1d(algo):
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=20, d=1):
+        S, U = _regions(s_lo, s_hi, u_lo, u_hi)
+        want = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
+        got = match_count(S, U, algo=algo)
+        assert got == want, f"seed={seed} algo={algo}: {got} != {want}"
+
+
+@pytest.mark.parametrize("algo", PAIR_ALGOS)
+def test_pairs_match_oracle_1d(algo):
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=10, d=1):
+        S, U = _regions(s_lo, s_hi, u_lo, u_hi)
+        mask = oracle_mask(s_lo, s_hi, u_lo, u_hi)
+        want = {(int(a), int(b)) * 1 for a, b in zip(*np.nonzero(mask))}
+        want = {int(a) * U.n + int(b) for a, b in zip(*np.nonzero(mask))}
+        cap = max(int(mask.sum()), 1) + 7
+        pairs, count = match_pairs(S, U, max_pairs=cap, algo=algo)
+        assert int(count) == len(want), f"seed={seed}"
+        assert pairs_to_set(pairs, U.n) == want, f"seed={seed} algo={algo}"
+
+
+@pytest.mark.parametrize("algo", ("bfm", "sbm", "itm"))
+@pytest.mark.parametrize("d", (2, 3))
+def test_count_matches_oracle_dd(algo, d):
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=8, d=d,
+                                                       max_n=150,
+                                                       max_m=150):
+        S, U = _regions(s_lo, s_hi, u_lo, u_hi)
+        want = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
+        got = match_count(S, U, algo=algo)
+        assert got == want, f"seed={seed} d={d} algo={algo}"
+
+
+def test_halfopen_touching_intervals_do_not_match():
+    # [0,1) and [1,2) share only the boundary point -> no overlap
+    S = make_regions(np.array([[0.0]]), np.array([[1.0]]))
+    U = make_regions(np.array([[1.0]]), np.array([[2.0]]))
+    for algo in COUNT_ALGOS:
+        assert match_count(S, U, algo=algo) == 0, algo
+    # and the mirror case
+    for algo in COUNT_ALGOS:
+        assert match_count(U, S, algo=algo) == 0, algo
+
+
+def test_identical_intervals_match():
+    S = make_regions(np.array([[3.0], [3.0]]), np.array([[7.0], [7.0]]))
+    U = make_regions(np.array([[3.0]]), np.array([[7.0]]))
+    for algo in COUNT_ALGOS:
+        assert match_count(S, U, algo=algo) == 2, algo
+
+
+def test_containment_and_equal_uppers():
+    # u inside s; equal upper endpoints; equal lower endpoints
+    S = make_regions(np.array([[0.0], [2.0], [4.0]]),
+                     np.array([[10.0], [6.0], [6.0]]))
+    U = make_regions(np.array([[1.0], [2.0], [5.0]]),
+                     np.array([[2.0], [6.0], [6.0]]))
+    mask = oracle_mask(np.asarray(S.lo), np.asarray(S.hi),
+                       np.asarray(U.lo), np.asarray(U.hi))
+    want = int(mask.sum())
+    for algo in COUNT_ALGOS:
+        assert match_count(S, U, algo=algo) == want, algo
+
+
+def test_paper_workload_alpha_scaling():
+    """E[K] grows ~linearly with alpha (paper §5: alpha is an indirect
+    measure of the number of intersections)."""
+    k = {}
+    for alpha in (0.01, 1.0, 100.0):
+        S, U = paper_workload(seed=11, n_total=4000, alpha=alpha)
+        k[alpha] = match_count(S, U, algo="sbm")
+    assert k[0.01] < k[1.0] < k[100.0]
+    # alpha=100 with N=4000: l = alpha*L/N, E[K] ~ n*m*2l/L = alpha*N/2
+    approx = 100.0 * 4000 / 2
+    assert 0.5 * approx < k[100.0] < 2.0 * approx
+
+
+def test_koln_like_workload_runs():
+    S, U = koln_like_workload(seed=1, n_positions=2000)
+    a = match_count(S, U, algo="sbm")
+    b = match_count(S, U, algo="sbm_binary")
+    c = match_count(S, U, algo="itm")
+    assert a == b == c
+    assert a >= S.n  # every region overlaps itself's twin at least
+
+
+def test_gbm_ncells_invariance():
+    """GBM must report identical K for any ncells (paper: ncells only
+    affects speed; the res-set/first-cell dedup guards correctness)."""
+    S, U = paper_workload(seed=3, n_total=3000, alpha=10.0)
+    want = match_count(S, U, algo="sbm")
+    for ncells in (7, 64, 500, 3000):
+        assert grid.gbm_count(S, U, ncells=ncells) == want, ncells
+
+
+def test_sbm_chunk_count_invariance():
+    """Alg. 6/7: result is independent of the number of segments P."""
+    S, U = paper_workload(seed=4, n_total=2048, alpha=5.0)
+    want = sbm.sbm_count_sweep(S, U)
+    for p in (1, 2, 3, 8, 64, 117):
+        assert sbm.sbm_count_chunked(S, U, p=p) == want, p
+
+
+def test_itm_swap_invariance():
+    S, U = paper_workload(seed=6, n_total=1000, alpha=2.0)
+    assert itm.itm_count(S, U, swap="S") == itm.itm_count(S, U, swap="U")
+
+
+def test_itm_tree_invariants():
+    """maxupper/minlower really bound their subtrees."""
+    S, _ = paper_workload(seed=7, n_total=600, alpha=1.0)
+    T = itm.build_tree(S)
+    lo = np.asarray(T.lo)
+    hi = np.asarray(T.hi)
+    mu = np.asarray(T.maxupper)
+    ml = np.asarray(T.minlower)
+    M = lo.shape[0] - 1
+    for k in range(1, M + 1):
+        kids = [c for c in (2 * k, 2 * k + 1) if c <= M]
+        want_mu = max([hi[k]] + [mu[c] for c in kids])
+        want_ml = min([lo[k]] + [ml[c] for c in kids])
+        assert mu[k] == want_mu and ml[k] == want_ml, k
+    # in-order traversal of lo is sorted (BST property)
+    def inorder(k, out):
+        if k > M:
+            return
+        inorder(2 * k, out)
+        if np.isfinite(lo[k]):
+            out.append(lo[k])
+        inorder(2 * k + 1, out)
+    out = []
+    import sys
+    sys.setrecursionlimit(10000)
+    inorder(1, out)
+    assert out == sorted(out)
+
+
+def test_bfm_tiled_equals_direct():
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=5, d=1):
+        S, U = _regions(s_lo, s_hi, u_lo, u_hi)
+        direct = int(np.asarray(brute.bfm_mask(S, U)).sum())
+        for tile in (1, 7, 64, 4096):
+            assert brute.bfm_count(S, U, tile=tile) == direct, (seed, tile)
+
+
+def test_pairs_overflow_reports_true_count():
+    S, U = paper_workload(seed=9, n_total=500, alpha=50.0)
+    true_k = match_count(S, U, algo="sbm")
+    pairs, count = match_pairs(S, U, max_pairs=5, algo="sbm")
+    assert int(count) == true_k and true_k > 5
+    assert pairs.shape == (5, 2)

@@ -1,0 +1,105 @@
+"""Optimizer substrate: AdamW semantics, schedule shape, int8 gradient
+compression unbiasedness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_int8,
+                         cosine_schedule, decompress_int8, global_norm)
+from repro.optim.compress import compress_tree, decompress_tree
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_weight_decay_decoupled():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=0.5,
+                      clip_norm=1e9)
+    params = {"w": jnp.asarray([1.0])}
+    state = adamw_init(params)
+    p2, _, _ = adamw_update(params, {"w": jnp.asarray([0.0])}, state, cfg)
+    # zero grad => pure decay: w -= lr*wd*w (m/v stay 0)
+    np.testing.assert_allclose(float(p2["w"][0]), 1.0 - 0.1 * 0.5 * 1.0,
+                               rtol=1e-5)
+
+
+def test_schedule_warmup_and_floor():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(cosine_schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(cosine_schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    end = float(cosine_schedule(cfg, jnp.int32(100)))
+    np.testing.assert_allclose(end, 0.1, rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), 6.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_int8_compression_unbiased_and_bounded():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 0.37
+    # unbiased: mean over many stochastic roundings converges to x
+    acc = jnp.zeros_like(x)
+    n = 64
+    for i in range(n):
+        q, s = compress_int8(x, jax.random.fold_in(rng, i))
+        acc = acc + decompress_int8(q, s)
+    err = float(jnp.max(jnp.abs(acc / n - x)))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert err < 0.3 * amax / 127 * np.sqrt(n) / n + 0.01
+    # single-shot error bounded by one quantization step
+    q, s = compress_int8(x, rng)
+    assert float(jnp.max(jnp.abs(decompress_int8(q, s) - x))) <= float(s) + 1e-6
+
+
+def test_compress_tree_roundtrip_shapes():
+    tree = {"a": jnp.ones((3, 5)), "b": {"c": jnp.zeros((7,))}}
+    qs, scales = compress_tree(tree, jax.random.PRNGKey(0))
+    out = decompress_tree(qs, scales)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.ones((3, 5)),
+                               atol=1e-2)
+
+
+def test_grad_accumulation_matches_monolithic():
+    """make_train_step(grad_accum=k) == monolithic batch semantics."""
+    import dataclasses
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import make_train_step
+    from repro.models import transformer as T
+    from repro.optim import adamw_init
+
+    cfg1 = dataclasses.replace(get_smoke_config("llama3_2_3b"),
+                               remat=False)
+    cfg2 = dataclasses.replace(cfg1, grad_accum=2)
+    params = T.init_params(cfg1, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (4, 33), 0, cfg1.vocab)}
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    p1, _, m1 = jax.jit(make_train_step(cfg1, ocfg))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg2, ocfg))(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        # first-step AdamW normalizes by sqrt(v)+eps, amplifying bf16
+        # forward noise where v ~ 0 — tolerance reflects that, not a
+        # semantic difference (grad means are mathematically equal).
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=2e-3)

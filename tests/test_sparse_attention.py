@@ -1,0 +1,122 @@
+"""DDM block-sparse attention: planner algebra + Pallas kernel vs oracle.
+
+Chain under test (DESIGN.md §3):
+  core interval matching → sparse.planner (bitmask / windows)
+  → kernels.sparse_attn (interpret) ≙ dense attention under the same mask.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sparse.planner import (BlockPlan, block_bitmask, block_windows,
+                                  decode_window)
+from repro.kernels.sparse_attn import sparse_attn_1h, sparse_attn
+
+
+def dense_masked_attention(q, k, v, allowed):
+    scores = (q.astype(np.float64) @ k.astype(np.float64).T
+              ) / np.sqrt(q.shape[-1])
+    scores = np.where(allowed, scores, -np.inf)
+    w = np.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = np.where(np.isfinite(scores), w, 0.0)
+    denom = w.sum(axis=-1, keepdims=True)
+    denom = np.where(denom > 0, denom, 1.0)
+    return (w / denom) @ v.astype(np.float64)
+
+
+def token_mask_from_plan(plan: BlockPlan) -> np.ndarray:
+    """(S, S) token-level mask implied by the plan (window+sink+causal)."""
+    S = plan.seq_len
+    qp = np.arange(S)[:, None]
+    kp = np.arange(S)[None, :]
+    causal = kp <= qp
+    in_window = kp > qp - plan.window
+    # block-granular: a q token shares its q-block's window start, which
+    # is aligned down to block boundaries
+    starts, ends = block_windows(plan)
+    qb = np.arange(S) // plan.block_q
+    win = (kp >= starts[qb][:, None]) & (kp < ends[qb][:, None])
+    sink = kp < plan.sink_end
+    return causal & (win | sink)
+
+
+@pytest.mark.parametrize("seq,window,bq,bkv,sink", [
+    (256, 64, 32, 32, 1),
+    (512, 128, 64, 32, 2),
+    (128, 512, 32, 32, 0),   # window covers everything
+])
+def test_planner_bitmask_matches_windows(seq, window, bq, bkv, sink):
+    plan = BlockPlan(seq, bq, bkv, window, sink)
+    bm = block_bitmask(plan)
+    starts, ends = block_windows(plan)
+    # windows are the contiguous hull of the non-sink bitmask columns
+    for i in range(plan.nq):
+        cols = np.nonzero(bm[i, sink:])[0] + sink
+        if len(cols):
+            assert starts[i] <= cols.min() * bkv
+            assert ends[i] >= min((cols.max() + 1) * bkv, seq) or \
+                ends[i] == min((i + 1) * bq, seq)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seq,window,bq,bkv,sink", [
+    (256, 64, 32, 32, 1),
+    (256, 96, 64, 32, 0),
+    (128, 1024, 32, 32, 1),
+])
+def test_sparse_attn_kernel_vs_dense_masked(dtype, seq, window, bq, bkv,
+                                            sink):
+    plan = BlockPlan(seq, bq, bkv, window, sink)
+    starts, ends = block_windows(plan)
+    rng = np.random.default_rng(3)
+    dh = 64
+    q = rng.normal(size=(seq, dh)).astype(np.float32)
+    k = rng.normal(size=(seq, dh)).astype(np.float32)
+    v = rng.normal(size=(seq, dh)).astype(np.float32)
+    got = sparse_attn_1h(jnp.asarray(q, dtype), jnp.asarray(k, dtype),
+                         jnp.asarray(v, dtype), jnp.asarray(starts),
+                         jnp.asarray(ends), bq=bq, bkv=bkv,
+                         sink_end=plan.sink_end, interpret=True)
+    allowed = token_mask_from_plan(plan)
+    want = dense_masked_attention(q, k, v, allowed)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=tol, atol=tol)
+
+
+def test_sparse_attn_batched_heads():
+    plan = BlockPlan(128, 32, 32, 64, 1)
+    starts, ends = block_windows(plan)
+    rng = np.random.default_rng(5)
+    B, H, dh = 2, 3, 32
+    q = jnp.asarray(rng.normal(size=(B, 128, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, 128, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, 128, H, dh)), jnp.float32)
+    out = sparse_attn(q, k, v, jnp.asarray(starts), jnp.asarray(ends),
+                      bq=32, bkv=32, sink_end=plan.sink_end,
+                      interpret=True)
+    assert out.shape == (B, 128, H, dh)
+    allowed = token_mask_from_plan(plan)
+    for b in range(B):
+        for h in range(H):
+            want = dense_masked_attention(np.asarray(q)[b, :, h],
+                                          np.asarray(k)[b, :, h],
+                                          np.asarray(v)[b, :, h], allowed)
+            np.testing.assert_allclose(
+                np.asarray(out)[b, :, h].astype(np.float64), want,
+                rtol=2e-5, atol=2e-5)
+
+
+def test_decode_window_matches_attention_mask_semantics():
+    """decode_window == the window/sink predicate in models.attention."""
+    plan = BlockPlan(4096, 128, 128, 512, 1)
+    for pos in (0, 100, 511, 512, 4000):
+        start, end = decode_window(pos, plan)
+        kv = np.arange(4096)
+        # attention.py predicate: (kv > pos - window) | (kv < sink_end)
+        pred = ((kv > pos - plan.window) | (kv < plan.sink_end)) \
+            & (kv <= pos)
+        plan_read = ((kv >= start) & (kv < end)) | (kv < plan.sink_end)
+        plan_read &= kv <= pos
+        np.testing.assert_array_equal(pred, plan_read)
