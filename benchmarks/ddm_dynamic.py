@@ -1,0 +1,75 @@
+"""Dynamic DDM engine scenario: batch size × region churn rate sweep.
+
+Measures the batched ``DDMService.update_regions`` tick cost against the
+equivalent sequence of single-region updates (the paper's §3 operation),
+for d ∈ {1, 2}, plus the exact two-pass pair enumeration across the
+overlap-degree sweep (the path that replaced the bounded-window emit).
+
+Rows:
+  dynamic_d{d}_churn{pct}_batched   — one batched call moving b regions
+  dynamic_d{d}_churn{pct}_seq       — b single-region update calls
+  twopass_pairs_n{N}_a{alpha}       — exact enumeration, K pairs emitted
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DDMService, match_pairs, paper_workload
+
+from .common import bench, row
+
+N_TOTAL = 4096
+CHURN = (0.01, 0.1, 0.5)
+DIMS = (1, 2)
+
+
+def _fresh_service(d: int) -> DDMService:
+    S, U = paper_workload(seed=7, n_total=N_TOTAL, alpha=5.0, d=d)
+    svc = DDMService(S, U)
+    svc.connect()
+    return svc
+
+
+def _moves(rng, svc: DDMService, b: int, d: int):
+    n = svc.s_lo.shape[0]
+    idx = rng.choice(n, size=b, replace=False)
+    lo = rng.uniform(0, 9e5, (b, d)).astype(np.float32)
+    hi = lo + rng.uniform(1.0, 5e3, (b, d)).astype(np.float32)
+    return idx, lo, hi
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for d in DIMS:
+        for churn in CHURN:
+            svc = _fresh_service(d)
+            b = max(int(churn * svc.s_lo.shape[0]), 1)
+            idx, lo, hi = _moves(rng, svc, b, d)
+
+            def batched():
+                svc.update_regions("sub", idx, lo, hi)
+
+            def sequential():
+                for i in range(b):
+                    svc.update_region("sub", int(idx[i]), lo[i], hi[i])
+
+            t_b = bench(batched, iters=3)
+            row(f"dynamic_d{d}_churn{int(churn * 100)}_batched", t_b,
+                f"b={b}")
+            t_s = bench(sequential, iters=1)
+            row(f"dynamic_d{d}_churn{int(churn * 100)}_seq", t_s,
+                f"b={b} speedup={t_s / t_b:.1f}x")
+
+    for n_total, alpha in ((4096, 1.0), (4096, 100.0), (16384, 10.0)):
+        S, U = paper_workload(seed=11, n_total=n_total, alpha=alpha)
+        _, k = match_pairs(S, U, max_pairs=1, algo="sbm")
+        cap = max(int(k), 1)
+        t = bench(lambda: match_pairs(S, U, max_pairs=cap, algo="sbm"))
+        row(f"twopass_pairs_n{n_total}_a{alpha:g}", t, f"K={k}")
+
+
+if __name__ == "__main__":
+    from .common import emit_header
+
+    emit_header()
+    run()

@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig12_scaling",
     "benchmarks.fig13_memory",
     "benchmarks.fig14_koln",
+    "benchmarks.ddm_dynamic",
 ]
 
 

@@ -1,12 +1,16 @@
 """HLA-style road-traffic pub/sub simulation (paper §1, Fig. 1).
 
-Vehicles move along a 1-D ring road.  Each vehicle owns
-  * an update region centred on its position (its "area of influence"),
-  * a subscription region skewed toward its direction of motion
-    ("a vehicle can safely ignore what happens behind it" — paper §1);
-traffic lights own update regions only.  Every tick the DDM service
-recomputes the overlap deltas for moved vehicles; matched pairs are the
-event routes the RTI would deliver.
+Vehicles move along a 2-D ring road: dimension 0 is the position along
+the road, dimension 1 the lane.  Each vehicle owns
+  * an update region centred on its position (its "area of influence",
+    confined to its own lane band),
+  * a subscription region skewed toward its direction of motion and
+    spanning its lane plus the neighbouring one ("a vehicle can safely
+    ignore what happens behind it" — paper §1);
+traffic lights own update regions only, spanning every lane.  Every tick
+ALL vehicles move, and the DDM service recomputes the overlap deltas with
+one batched ``update_regions`` call per region kind — two device
+round-trips per tick instead of two per vehicle.
 
     PYTHONPATH=src python examples/ddm_simulation.py
 """
@@ -15,52 +19,66 @@ import numpy as np
 from repro.core import DDMService, make_regions
 
 ROAD = 10_000.0
+N_LANES = 4
 N_VEHICLES = 120
 N_LIGHTS = 12
 TICKS = 20
 
 
+def _vehicle_regions(pos, lane):
+    """(sub_lo, sub_hi, upd_lo, upd_hi), each (n, 2), for vehicle state."""
+    sub_lo = np.stack([pos - 10.0, lane - 1.0], axis=1)
+    sub_hi = np.stack([pos + 80.0, lane + 2.0], axis=1)
+    upd_lo = np.stack([pos - 15.0, lane + 0.0], axis=1)
+    upd_hi = np.stack([pos + 15.0, lane + 1.0], axis=1)
+    return sub_lo, sub_hi, upd_lo, upd_hi
+
+
 def main():
     rng = np.random.default_rng(0)
     pos = rng.uniform(0, ROAD, N_VEHICLES)
+    lane = rng.integers(0, N_LANES, N_VEHICLES).astype(np.float64)
     speed = rng.uniform(5.0, 25.0, N_VEHICLES)
 
-    # subscriptions: vehicles look ahead 80 m, back 10 m
-    sub_lo = pos - 10.0
-    sub_hi = pos + 80.0
-    # updates: vehicles radiate 15 m around; lights 30 m, fixed
-    upd_lo = np.concatenate([pos - 15.0,
-                             np.linspace(0, ROAD, N_LIGHTS) - 30.0])
-    upd_hi = np.concatenate([pos + 15.0,
-                             np.linspace(0, ROAD, N_LIGHTS) + 30.0])
+    sub_lo, sub_hi, upd_lo, upd_hi = _vehicle_regions(pos, lane)
+    # traffic lights: fixed 60 m bands across all lanes
+    light_x = np.linspace(0, ROAD, N_LIGHTS)
+    light_lo = np.stack([light_x - 30.0, np.zeros(N_LIGHTS)], axis=1)
+    light_hi = np.stack([light_x + 30.0,
+                         np.full(N_LIGHTS, float(N_LANES))], axis=1)
 
-    svc = DDMService(make_regions(sub_lo[:, None], sub_hi[:, None]),
-                     make_regions(upd_lo[:, None], upd_hi[:, None]))
+    svc = DDMService(make_regions(sub_lo, sub_hi),
+                     make_regions(np.concatenate([upd_lo, light_lo]),
+                                  np.concatenate([upd_hi, light_hi])))
     pairs = svc.connect()
     print(f"tick  0: {len(pairs):4d} active (subscriber, publisher) "
           f"routes")
 
+    vehicle_ids = np.arange(N_VEHICLES)
     total_events = len(pairs)
     for tick in range(1, TICKS + 1):
         pos = (pos + speed) % ROAD
-        n_changed, delta_add, delta_rm = 0, 0, 0
-        for v in range(N_VEHICLES):
-            # vehicle v's subscription and update regions both move
-            a1, r1 = svc.update_region("sub", v, pos[v] - 10.0,
-                                       pos[v] + 80.0)
-            a2, r2 = svc.update_region("upd", v, pos[v] - 15.0,
-                                       pos[v] + 15.0)
-            delta_add += len(a1) + len(a2)
-            delta_rm += len(r1) + len(r2)
-            n_changed += 1
+        # occasional lane changes keep dimension 1 dynamic too
+        switch = rng.random(N_VEHICLES) < 0.05
+        lane = np.where(switch,
+                        np.clip(lane + rng.choice([-1.0, 1.0],
+                                                  N_VEHICLES), 0,
+                                N_LANES - 1),
+                        lane)
+        sub_lo, sub_hi, upd_lo, upd_hi = _vehicle_regions(pos, lane)
+        # one batched update per region kind — the whole tick's churn
+        a1, r1 = svc.update_regions("sub", vehicle_ids, sub_lo, sub_hi)
+        a2, r2 = svc.update_regions("upd", vehicle_ids, upd_lo, upd_hi)
+        delta_add = len(a1) + len(a2)
+        delta_rm = len(r1) + len(r2)
         total_events += delta_add
         print(f"tick {tick:2d}: {len(svc.pairs):4d} routes "
               f"(+{delta_add:3d}/-{delta_rm:3d} this tick)")
 
     # cross-check the incremental ledger against a from-scratch match
     from repro.core import match_count
-    S = make_regions(svc.s_lo[:, None], svc.s_hi[:, None])
-    U = make_regions(svc.u_lo[:, None], svc.u_hi[:, None])
+    S = make_regions(svc.s_lo, svc.s_hi)
+    U = make_regions(svc.u_lo, svc.u_hi)
     k = match_count(S, U, algo="sbm")
     assert k == len(svc.pairs), (k, len(svc.pairs))
     print(f"\nledger == from-scratch SBM match ({k} routes); "

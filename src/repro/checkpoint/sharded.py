@@ -120,18 +120,31 @@ def latest_step(ckpt_dir) -> int | None:
 
 def _reshard_plan(old_ranges, new_ranges):
     """Which old shards overlap each new shard's row range — computed by
-    the paper's interval matcher (half-open row intervals)."""
-    S = Regions(np.asarray([[r[0]] for r in new_ranges], np.float32),
-                np.asarray([[r[1]] for r in new_ranges], np.float32))
-    U = Regions(np.asarray([[r[0]] for r in old_ranges], np.float32),
-                np.asarray([[r[1]] for r in old_ranges], np.float32))
-    cap = (len(new_ranges) + len(old_ranges)) * 2 + 8
+    the paper's interval matcher (half-open row intervals).
+
+    Zero-row shard ranges (lo == hi, produced when n_shards > n_rows)
+    hold no data and would violate the matcher's non-empty-interval
+    precondition — they are dropped before matching and can appear in no
+    plan entry."""
+    new_ids = [i for i, (lo, hi) in enumerate(new_ranges) if lo < hi]
+    old_ids = [i for i, (lo, hi) in enumerate(old_ranges) if lo < hi]
+    if not new_ids or not old_ids:
+        return {}
+    S = Regions(np.asarray([[new_ranges[i][0]] for i in new_ids],
+                           np.float32),
+                np.asarray([[new_ranges[i][1]] for i in new_ids],
+                           np.float32))
+    U = Regions(np.asarray([[old_ranges[i][0]] for i in old_ids],
+                           np.float32),
+                np.asarray([[old_ranges[i][1]] for i in old_ids],
+                           np.float32))
+    cap = (len(new_ids) + len(old_ids)) * 2 + 8
     pairs, count = match_pairs(S, U, max_pairs=cap, algo="sbm")
     pairs = np.asarray(pairs)
     pairs = pairs[pairs[:, 0] >= 0]
     plan: dict[int, list[int]] = {}
     for new_i, old_i in pairs:
-        plan.setdefault(int(new_i), []).append(int(old_i))
+        plan.setdefault(new_ids[int(new_i)], []).append(old_ids[int(old_i)])
     for v in plan.values():
         v.sort()
     return plan

@@ -3,7 +3,9 @@
 Public surface:
     Regions, make_regions, paper_workload, koln_like_workload
     match_count / match_pairs / block_mask  (algo = bfm|gbm|sbm|itm|...)
-    DDMService (dynamic regions)
+      — pair enumeration is the exact two-pass count-then-emit path
+        (per-emitter counts, exclusive-scan offsets, parallel emit)
+    DDMService (dynamic d-dim regions; batched ``update_regions`` churn)
     distributed: shard_map multi-device SBM (core.distributed)
 """
 from .regions import (Regions, make_regions, paper_workload,

@@ -38,9 +38,17 @@ def _project(R: Regions, dim: int) -> Regions:
 
 def match_count(S: Regions, U: Regions, algo: str = "sbm", *,
                 max_pairs: int | None = None, **kw) -> int:
-    """Total number of overlapping (subscription, update) pairs."""
+    """Total number of overlapping (subscription, update) pairs.
+
+    Always exact.  For d > 1 the dim-0 candidate buffer is sized from the
+    *exact* dim-0 pair count (binary-search SBM per-sub counts), so there
+    is no overflow path; a caller-supplied ``max_pairs`` only ever grows
+    the buffer.
+    """
     if algo not in ALGOS:
         raise ValueError(f"algo must be one of {ALGOS}")
+    if S.n == 0 or U.n == 0:
+        return 0
     if S.d == 1:
         if algo == "bfm":
             return brute.bfm_count(S, U, **kw)
@@ -56,19 +64,16 @@ def match_count(S: Regions, U: Regions, algo: str = "sbm", *,
             return itm.itm_count(S, U, **kw)
     if algo == "bfm":
         return brute.bfm_count(S, U, **kw)  # mask tests all dims at once
-    # match dim 0, verify the rest
-    if max_pairs is None:
-        max_pairs = _candidate_bound(S, U)
-    pairs, count = match_pairs(S, U, max_pairs=max_pairs, algo=algo, **kw)
-    if int(count) > max_pairs:
-        raise OverflowError(
-            f"d-dim candidate buffer overflow: {int(count)} > {max_pairs}; "
-            "pass a larger max_pairs")
+    # match dim 0 (exact, exactly-sized candidate buffer inside
+    # match_pairs), verify the rest; the count is exact regardless of the
+    # output buffer size.
+    pairs, count = match_pairs(S, U, max_pairs=max_pairs or 1,
+                               algo=algo, **kw)
     return int(count)
 
 
 def _candidate_bound(S: Regions, U: Regions) -> int:
-    """Cheap upper bound on dim-0 candidate count (binary-search SBM)."""
+    """Exact dim-0 candidate count (binary-search SBM per-sub counts)."""
     c = sbm.sbm_count_per_sub(_project(S, 0), _project(U, 0))
     return max(int(np.sum(np.asarray(c), dtype=np.int64)), 1)
 
@@ -78,8 +83,7 @@ def _candidate_bound(S: Regions, U: Regions) -> int:
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("max_pairs",))
-def _verify_dims(S: Regions, U: Regions, cand: Array, cand_count: Array,
-                 max_pairs: int):
+def _verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):
     """Filter dim-0 candidate pairs on dimensions 1..d-1, recompact."""
     s_idx, u_idx = cand[:, 0], cand[:, 1]
     valid = s_idx >= 0
@@ -100,36 +104,45 @@ def match_pairs(S: Regions, U: Regions, max_pairs: int,
     """Enumerate overlapping pairs, each exactly once, −1-padded buffer.
 
     Returns ``(pairs int32 (max_pairs, 2), count)``.  ``count`` is the
-    exact number of overlaps; if it exceeds ``max_pairs`` the buffer is
-    truncated (caller decides whether that is an overflow).
+    exact number of overlaps (int64-safe); if it exceeds ``max_pairs``
+    the buffer is truncated (caller decides whether that is an overflow).
+    Empty S or U yields a well-formed all-−1 buffer with count 0 for
+    every algorithm.
     """
+    if algo not in ALGOS:
+        raise ValueError(f"algo must be one of {ALGOS}")
+    if S.n == 0 or U.n == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
     if algo == "bfm" or (S.d > 1 and algo == "gbm"):
         return brute.bfm_pairs(S, U, max_pairs)
     S0, U0 = _project(S, 0), _project(U, 0)
+    # d > 1: the dim-0 candidate buffer must hold EVERY dim-0 overlap or
+    # verification would silently drop true pairs — size it from the
+    # exact dim-0 count, independent of the caller's output cap.
+    cand_cap = max_pairs if S.d == 1 else _candidate_bound(S, U)
     if algo in ("sbm", "sbm_chunked", "sbm_binary"):
-        cand, ccount = sbm.sbm_pairs(S0, U0, max_pairs, **kw)
+        cand, ccount = sbm.sbm_pairs(S0, U0, cand_cap, **kw)
     elif algo == "itm":
         T = itm.build_tree(S0)
         counts = itm.itm_query_counts(T, U0.lo[:, 0], U0.hi[:, 0])
-        cap = max(int(np.max(np.asarray(counts))), 1)
+        cap = max(int(np.max(np.asarray(counts), initial=0)), 1)
         ids, _ = itm.itm_query_pairs(T, U0.lo[:, 0], U0.hi[:, 0], cap)
         nq = ids.shape[0]
         u_idx = jnp.broadcast_to(
             jnp.arange(nq, dtype=jnp.int32)[:, None], ids.shape)
         flat_ok = (ids >= 0).ravel()
-        sel = jnp.nonzero(flat_ok, size=max_pairs, fill_value=-1)[0]
+        sel = jnp.nonzero(flat_ok, size=cand_cap, fill_value=-1)[0]
         s_sel = jnp.where(sel >= 0, ids.ravel()[jnp.maximum(sel, 0)], -1)
         u_sel = jnp.where(sel >= 0, u_idx.ravel()[jnp.maximum(sel, 0)], -1)
         cand = jnp.stack([s_sel, u_sel], axis=1)
-        ccount = jnp.asarray(np.sum(np.asarray(counts), dtype=np.int64)
-                             .astype(np.int32))
+        ccount = int(np.sum(np.asarray(counts), dtype=np.int64))
     elif algo == "gbm":
         return brute.bfm_pairs(S, U, max_pairs)
     else:
         raise ValueError(f"algo must be one of {ALGOS}")
     if S.d == 1:
         return cand, ccount
-    return _verify_dims(S, U, cand, ccount, max_pairs)
+    return _verify_dims(S, U, cand, max_pairs)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .regions import Regions
 
+# ``jax.shard_map`` is the new-JAX spelling; older versions ship it under
+# jax.experimental with the same signature.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - exercised only on old JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 Array = jax.Array
 AXIS = "shards"
 
@@ -116,7 +122,7 @@ def _shard_body(v, is_lo, is_upd, valid, splitters, *, cap: int,
 @partial(jax.jit, static_argnames=("nshards", "cap", "mesh"))
 def _dist_count(v, is_lo, is_upd, valid, splitters, *, nshards: int,
                 cap: int, mesh: Mesh):
-    f = jax.shard_map(
+    f = _shard_map(
         partial(_shard_body, cap=cap, nshards=nshards),
         mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P()),

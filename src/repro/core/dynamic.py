@@ -1,4 +1,5 @@
-"""Dynamic DDM service — paper §3 "dynamic interval management".
+"""Dynamic DDM service — paper §3 "dynamic interval management", batched
+and d-dimensional.
 
 HLA federates move/resize regions constantly; rerunning the full match is
 wasteful.  The paper keeps two interval trees (T_S over subscriptions,
@@ -7,13 +8,27 @@ T_U over updates): when a region of one kind changes, the overlaps of the
 kind — O(min{n, K lg n}) instead of a full rematch — and the changed
 region is delete+reinserted into its own tree.
 
-Array adaptation: queries use ``core.itm`` exactly as the paper does.
-Structural delete+reinsert on a pointer AVL becomes *deferred rebuild*
-here: the changed set's tree is marked stale and rebuilt (sort + gather,
-O(n lg n), jitted) only when the next query against it arrives, amortizing
-rebuilds across bursts of updates — the standard array-index equivalent.
-The overlap *ledger* is a host-side sorted id set (the paper's Report()
-sink is model-specific; ours returns exact added/removed pair deltas).
+Array adaptation, three deviations from the pointer version:
+
+* **d dimensions** via match-then-verify (``dd_match`` reduction): the
+  tree indexes dim 0; candidates from the tree walk are filtered on the
+  remaining dimensions with a vectorized gather + compare
+  (``itm.itm_query_pairs_dd``).
+* **Batched churn**: real workloads move many regions per tick.
+  ``update_regions`` takes a whole batch of moved regions and runs ONE
+  vmapped tree query for all old extents plus all new extents — a single
+  device round-trip per tick instead of two per region.  Moves of one
+  kind never touch the tree being queried (pairs are sub×upd, and the
+  opposite kind's tree is the one walked), so a batch is exactly
+  equivalent to a sequence of single updates.
+* Structural delete+reinsert on a pointer AVL becomes *deferred rebuild*:
+  the changed set's tree is marked stale and rebuilt (sort + gather,
+  O(n lg n), jitted) only when the next query against it arrives,
+  amortizing rebuilds across bursts of updates.
+
+The overlap *ledger* is a host-side set of (s, u) id pairs (the paper's
+Report() sink is model-specific); deltas are computed vectorized on
+int64-encoded keys, not with per-region Python loops.
 """
 from __future__ import annotations
 
@@ -24,15 +39,27 @@ from . import itm
 from .regions import Regions
 
 
+def _cap_pow2(x: int) -> int:
+    """Round a query capacity up to a power of two (bounds recompiles of
+    the static-``cap`` query kernel to O(lg max_count) distinct shapes)."""
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
 class DDMService:
-    """Stateful pub/sub matching service over 1-D regions."""
+    """Stateful pub/sub matching service over d-dimensional regions.
+
+    ``cap_hint`` floors the per-query id-buffer capacity (rounded up to a
+    power of two), so steady-state churn reuses one compiled query kernel
+    instead of recompiling whenever the max per-query count drifts.
+    """
 
     def __init__(self, S: Regions, U: Regions, cap_hint: int = 64):
-        assert S.d == 1 and U.d == 1
-        self.s_lo = np.asarray(S.lo[:, 0]).copy()
-        self.s_hi = np.asarray(S.hi[:, 0]).copy()
-        self.u_lo = np.asarray(U.lo[:, 0]).copy()
-        self.u_hi = np.asarray(U.hi[:, 0]).copy()
+        assert S.d == U.d, (S.d, U.d)
+        self.d = S.d
+        self.s_lo = np.asarray(S.lo, np.float32).copy()   # (n, d)
+        self.s_hi = np.asarray(S.hi, np.float32).copy()
+        self.u_lo = np.asarray(U.lo, np.float32).copy()   # (m, d)
+        self.u_hi = np.asarray(U.hi, np.float32).copy()
         self._tree_S = None
         self._tree_U = None
         self.cap_hint = cap_hint
@@ -40,12 +67,10 @@ class DDMService:
 
     # -- tree cache ---------------------------------------------------------
     def _S(self) -> Regions:
-        return Regions(jnp.asarray(self.s_lo)[:, None],
-                       jnp.asarray(self.s_hi)[:, None])
+        return Regions(jnp.asarray(self.s_lo), jnp.asarray(self.s_hi))
 
     def _U(self) -> Regions:
-        return Regions(jnp.asarray(self.u_lo)[:, None],
-                       jnp.asarray(self.u_hi)[:, None])
+        return Regions(jnp.asarray(self.u_lo), jnp.asarray(self.u_hi))
 
     def tree_S(self):
         if self._tree_S is None:
@@ -57,51 +82,106 @@ class DDMService:
             self._tree_U = itm.build_tree(self._U())
         return self._tree_U
 
+    # -- batched verified overlap query --------------------------------------
+    def _overlap_ids(self, kind: str, q_lo: np.ndarray,
+                     q_hi: np.ndarray) -> np.ndarray:
+        """(b, cap) −1-padded ids of the OPPOSITE kind overlapping each of
+        the b query boxes, verified on all d dimensions."""
+        if kind == "sub":
+            tree, o_lo, o_hi = self.tree_U(), self.u_lo, self.u_hi
+        else:
+            tree, o_lo, o_hi = self.tree_S(), self.s_lo, self.s_hi
+        b = q_lo.shape[0]
+        if b == 0 or o_lo.shape[0] == 0:
+            return np.full((b, 1), -1, np.int32)
+        ql = jnp.asarray(q_lo, jnp.float32)
+        qh = jnp.asarray(q_hi, jnp.float32)
+        counts0 = itm.itm_query_counts(tree, ql[:, 0], qh[:, 0])
+        cap = _cap_pow2(max(int(np.max(np.asarray(counts0), initial=0)),
+                            self.cap_hint, 1))
+        ids, _ = itm.itm_query_pairs_dd(
+            tree, jnp.asarray(o_lo), jnp.asarray(o_hi), ql, qh, cap)
+        return np.asarray(ids)
+
     # -- full match (service bring-up) ---------------------------------------
     def connect(self) -> set[tuple[int, int]]:
-        """Initial full match; populates the overlap ledger."""
-        T = self.tree_S()
-        q_lo, q_hi = jnp.asarray(self.u_lo), jnp.asarray(self.u_hi)
-        counts = itm.itm_query_counts(T, q_lo, q_hi)
-        cap = max(int(np.max(np.asarray(counts)) if counts.size else 0), 1)
-        ids, _ = itm.itm_query_pairs(T, q_lo, q_hi, cap)
-        ids = np.asarray(ids)
-        self.pairs = {(int(s), int(u))
-                      for u in range(ids.shape[0])
-                      for s in ids[u] if s >= 0}
+        """Initial full match; populates the overlap ledger (vectorized:
+        one batched tree query over all update regions, no Python loop)."""
+        ids = self._overlap_ids("upd", self.u_lo, self.u_hi)   # (m, cap)
+        u_idx = np.broadcast_to(
+            np.arange(ids.shape[0], dtype=np.int64)[:, None], ids.shape)
+        keep = ids >= 0
+        self.pairs = set(zip(ids[keep].astype(int).tolist(),
+                             u_idx[keep].astype(int).tolist()))
         return self.pairs
 
-    # -- single-region overlap query -----------------------------------------
-    def _overlaps_of(self, kind: str, lo: float, hi: float) -> set[int]:
-        tree = self.tree_U() if kind == "sub" else self.tree_S()
-        counts = itm.itm_query_counts(
-            tree, jnp.asarray([lo], jnp.float32),
-            jnp.asarray([hi], jnp.float32))
-        cap = max(int(counts[0]), 1)
-        ids, _ = itm.itm_query_pairs(
-            tree, jnp.asarray([lo], jnp.float32),
-            jnp.asarray([hi], jnp.float32), cap)
-        return {int(i) for i in np.asarray(ids)[0] if i >= 0}
+    # -- the dynamic operation (paper §3), batched -----------------------------
+    def update_regions(self, kind: str, idx, new_lo, new_hi):
+        """Move/resize a batch of regions of one kind in a single tick.
 
-    # -- the dynamic operation (paper §3) --------------------------------------
-    def update_region(self, kind: str, idx: int, new_lo: float,
-                      new_hi: float):
-        """Move/resize one region; returns (added, removed) pair deltas."""
+        ``idx`` is (b,) region indices; ``new_lo``/``new_hi`` are (b, d)
+        (or (b,) when d == 1).  Returns ``(added, removed)`` — the exact
+        net pair deltas, identical to applying the b single-region
+        updates in sequence (duplicate indices: last occurrence wins and
+        the deltas are the sequence's net effect).  A zero-churn batch
+        (b == 0) is a no-op returning two empty sets.
+        """
         assert kind in ("sub", "upd")
-        old = self._overlaps_of(kind, *(
-            (self.s_lo[idx], self.s_hi[idx]) if kind == "sub"
-            else (self.u_lo[idx], self.u_hi[idx])))
-        new = self._overlaps_of(kind, new_lo, new_hi)
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        new_lo = np.asarray(new_lo, np.float32).reshape(idx.shape[0], self.d)
+        new_hi = np.asarray(new_hi, np.float32).reshape(idx.shape[0], self.d)
+        if idx.shape[0] == 0:
+            return set(), set()
+        # duplicate indices: keep the last occurrence (sequential "last
+        # write wins"); deltas below are then the exact net of the sequence.
+        _, last = np.unique(idx[::-1], return_index=True)
+        keep = np.sort(idx.shape[0] - 1 - last)
+        idx, new_lo, new_hi = idx[keep], new_lo[keep], new_hi[keep]
+        b = idx.shape[0]
+
+        own_lo, own_hi = ((self.s_lo, self.s_hi) if kind == "sub"
+                          else (self.u_lo, self.u_hi))
+        # one batched query for all old extents AND all new extents
+        q_lo = np.concatenate([own_lo[idx], new_lo])
+        q_hi = np.concatenate([own_hi[idx], new_hi])
+        ids = self._overlap_ids(kind, q_lo, q_hi)              # (2b, cap)
+        old_ids, new_ids = ids[:b], ids[b:]
+
+        own_lo[idx] = new_lo
+        own_hi[idx] = new_hi
         if kind == "sub":
-            self.s_lo[idx], self.s_hi[idx] = new_lo, new_hi
             self._tree_S = None            # deferred rebuild
-            added = {(idx, u) for u in new - old}
-            removed = {(idx, u) for u in old - new}
         else:
-            self.u_lo[idx], self.u_hi[idx] = new_lo, new_hi
             self._tree_U = None
-            added = {(s, idx) for s in new - old}
-            removed = {(s, idx) for s in old - new}
+
+        # vectorized delta: encode (s, u) as s*m + u in int64, set-diff
+        m = max(self.u_lo.shape[0], 1)
+        moved = np.broadcast_to(idx[:, None], old_ids.shape)
+
+        def encode(other):
+            keep = other >= 0
+            other64 = other[keep].astype(np.int64)
+            mv = moved[keep]
+            if kind == "sub":
+                return mv * m + other64
+            return other64 * m + mv
+
+        old_keys = encode(old_ids)
+        new_keys = encode(new_ids)
+        added_k = np.setdiff1d(new_keys, old_keys)
+        removed_k = np.setdiff1d(old_keys, new_keys)
+        added = set(zip((added_k // m).astype(int).tolist(),
+                        (added_k % m).astype(int).tolist()))
+        removed = set(zip((removed_k // m).astype(int).tolist(),
+                          (removed_k % m).astype(int).tolist()))
         self.pairs |= added
         self.pairs -= removed
         return added, removed
+
+    # -- single-region compatibility wrapper -----------------------------------
+    def update_region(self, kind: str, idx: int, new_lo, new_hi):
+        """Move/resize one region; returns (added, removed) pair deltas."""
+        return self.update_regions(
+            kind, np.asarray([idx]),
+            np.asarray(new_lo, np.float32).reshape(1, self.d),
+            np.asarray(new_hi, np.float32).reshape(1, self.d))

@@ -192,6 +192,30 @@ def itm_query_pairs(tree: ITree, q_lo: Array, q_hi: Array, cap: int):
         q_lo, q_hi)
 
 
+@partial(jax.jit, static_argnames=("cap",))
+def itm_query_pairs_dd(tree: ITree, o_lo: Array, o_hi: Array,
+                       q_lo: Array, q_hi: Array, cap: int):
+    """Batched d-dim overlap query: dim-0 tree walk, then verify dims 1+.
+
+    ``tree`` indexes dim 0 of the regions whose full coords are
+    ``o_lo``/``o_hi`` (n, d); ``q_lo``/``q_hi`` are (b, d) query boxes.
+    Returns ``(ids, counts)``: (b, cap) region ids overlapping each query
+    on *all* dimensions (−1 padded, order-unspecified) and (b,) verified
+    counts.  ``cap`` must cover the dim-0 candidate count per query
+    (size it from ``itm_query_counts`` on dim 0).
+    """
+    ids, _ = jax.vmap(
+        lambda a, b: _query_pairs_one(tree, a, b, cap))(q_lo[:, 0],
+                                                        q_hi[:, 0])
+    valid = ids >= 0
+    ic = jnp.maximum(ids, 0)
+    ok = jnp.all(
+        jnp.logical_and(o_lo[ic, 1:] < q_hi[:, None, 1:],
+                        q_lo[:, None, 1:] < o_hi[ic, 1:]), axis=-1)
+    ok = ok & valid
+    return jnp.where(ok, ids, -1), jnp.sum(ok, axis=-1, dtype=jnp.int32)
+
+
 def itm_count(S: Regions, U: Regions, swap: str = "auto") -> int:
     """Total K: build tree on one set, query the other (paper Alg. 5).
 

@@ -173,49 +173,87 @@ def sbm_count_binary(S: Regions, U: Regions) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Pair enumeration — sorted-window compaction (static shapes for XLA)
+# Pair enumeration — exact two-pass count-then-emit (no window measurement)
 # ---------------------------------------------------------------------------
+#
+# Every overlap (s, u) of non-empty half-open intervals falls into exactly
+# one of two classes:
+#
+#   A: u.lo ∈ [s.lo, s.hi)  — then u.hi > u.lo ≥ s.lo, so overlap holds.
+#      In lo-sorted U this is the contiguous index range [aA_s, rA_s).
+#   B: u.lo < s.lo < u.hi   — i.e. s.lo stabs u from inside.  Flipping
+#      roles, these are the s whose lo lies in (u.lo, u.hi): the
+#      contiguous range [bB_u, cB_u) of lo-sorted S.
+#
+# Both classes are searchsorted ranges, so pass 1 yields exact per-emitter
+# counts, an exclusive scan yields output offsets, and pass 2 emits every
+# pair into its slot fully in parallel — no data-dependent window, no
+# host-side l_max measurement, no overflow on long-region workloads.
+# (The scan saturates at max_pairs so slot arithmetic stays in int32 even
+# when the true K exceeds the buffer; the exact K is summed host-side in
+# int64 from the unclipped per-emitter counts.)
 
-@partial(jax.jit, static_argnames=("window", "max_pairs"))
-def _pairs_windowed(s_lo, s_hi, u_lo_sorted, u_hi_perm, perm,
-                    window: int, max_pairs: int):
-    n = s_lo.shape[0]
-    r = jnp.searchsorted(u_lo_sorted, s_hi, side="left")      # (n,)
-    w0 = jnp.maximum(r - window, 0)
-    idx = w0[:, None] + jnp.arange(window)[None, :]            # (n, W)
-    valid = idx < r[:, None]
-    idx_c = jnp.minimum(idx, u_lo_sorted.shape[0] - 1)
-    overlap = valid & (u_hi_perm[idx_c] > s_lo[:, None])
-    count = jnp.sum(overlap, dtype=jnp.int32)
-    flat = jnp.nonzero(overlap.ravel(), size=max_pairs, fill_value=-1)[0]
-    s_idx = jnp.where(flat >= 0, flat // window, -1).astype(jnp.int32)
-    u_sorted_idx = jnp.where(flat >= 0, flat % window, 0) + \
-        jnp.take(w0, jnp.maximum(s_idx, 0))
-    u_idx = jnp.where(flat >= 0, perm[u_sorted_idx], -1).astype(jnp.int32)
-    return jnp.stack([s_idx, u_idx], axis=1), count
+@partial(jax.jit, static_argnames=("max_pairs",))
+def _twopass_emit(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    perm_u = jnp.argsort(u_lo).astype(jnp.int32)
+    perm_s = jnp.argsort(s_lo).astype(jnp.int32)
+    u_lo_sorted = u_lo[perm_u]
+    s_lo_sorted = s_lo[perm_s]
+
+    # pass 1: exact per-emitter counts (A: one emitter per s; B: per u)
+    aA = jnp.searchsorted(u_lo_sorted, s_lo, side="left").astype(jnp.int32)
+    rA = jnp.searchsorted(u_lo_sorted, s_hi, side="left").astype(jnp.int32)
+    bB = jnp.searchsorted(s_lo_sorted, u_lo, side="right").astype(jnp.int32)
+    cB = jnp.searchsorted(s_lo_sorted, u_hi, side="left").astype(jnp.int32)
+    # the maximum(·, 0) guards the offsets scan against degenerate
+    # (empty, lo == hi) intervals, which violate the module precondition
+    # but must not corrupt emission for the well-formed regions
+    cnt_a = jnp.maximum(rA - aA, 0)                        # (n,)
+    cnt_b = jnp.maximum(cB - bB, 0)                        # (m,)
+
+    # exclusive-scan offsets, saturating at max_pairs: offsets below the
+    # buffer limit stay exact; emitters wholly past it land on the limit
+    # and are never selected by the slot lookup.
+    counts = jnp.concatenate([cnt_a, cnt_b])
+    lim = jnp.int32(max_pairs)
+    incl = jax.lax.associative_scan(
+        lambda a, b: jnp.minimum(a + b, lim), counts)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), incl])
+
+    # pass 2: one thread per output slot
+    t = jnp.arange(max_pairs, dtype=jnp.int32)
+    e = jnp.searchsorted(offs, t, side="right").astype(jnp.int32) - 1
+    e = jnp.minimum(e, n + m - 1)
+    j = t - offs[e]
+    valid = (j >= 0) & (j < counts[e])
+    is_a = e < n
+    e_a = jnp.minimum(e, n - 1)
+    e_b = jnp.clip(e - n, 0, m - 1)
+    u_from_a = perm_u[jnp.clip(aA[e_a] + j, 0, m - 1)]
+    s_from_b = perm_s[jnp.clip(bB[e_b] + j, 0, n - 1)]
+    s_idx = jnp.where(valid, jnp.where(is_a, e_a, s_from_b), -1)
+    u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, e_b), -1)
+    pairs = jnp.stack([s_idx, u_idx], axis=1).astype(jnp.int32)
+    return pairs, cnt_a, cnt_b
 
 
-def sbm_pairs(S: Regions, U: Regions, max_pairs: int,
-              window: int | None = None):
-    """Enumerate 1-D overlaps via the sort + bounded-window formulation.
+def sbm_pairs(S: Regions, U: Regions, max_pairs: int):
+    """Enumerate 1-D overlaps exactly via two-pass count-then-emit.
 
-    Sort U by lo.  For subscription s the overlap set is contained in the
-    sorted index window [searchsorted(u_lo, s.lo − l_max), searchsorted(
-    u_lo, s.hi)) where l_max is the longest update region: any u with
-    u.lo ≤ s.lo − l_max has u.hi ≤ s.lo.  The window width is data-
-    dependent; it is measured host-side once and passed as a static arg.
-
-    Returns (pairs int32 (max_pairs,2) padded with −1, exact count).
+    Returns ``(pairs, count)``: ``pairs`` is int32 (max_pairs, 2) padded
+    with −1; ``count`` is the exact total K as a python int (int64-safe),
+    cross-checkable against ``sbm_count_per_sub(S, U).sum()``.  If
+    ``count > max_pairs`` the buffer holds the first ``max_pairs`` pairs
+    in emission order (explicit truncation — the caller decides whether
+    that is an overflow).  Empty S or U returns a well-formed all-−1
+    buffer with count 0.
     """
     assert S.d == 1
-    s_lo, s_hi = S.lo[:, 0], S.hi[:, 0]
-    perm = jnp.argsort(U.lo[:, 0])
-    u_lo_sorted = U.lo[:, 0][perm]
-    u_hi_perm = U.hi[:, 0][perm]
-    if window is None:
-        l_max = float(jnp.max(U.hi[:, 0] - U.lo[:, 0]))
-        r = jnp.searchsorted(u_lo_sorted, s_hi, side="left")
-        w0 = jnp.searchsorted(u_lo_sorted, s_lo - l_max, side="left")
-        window = max(int(jnp.max(r - w0)), 1)
-    return _pairs_windowed(s_lo, s_hi, u_lo_sorted, u_hi_perm,
-                           perm.astype(jnp.int32), window, max_pairs)
+    if S.n == 0 or U.n == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    pairs, cnt_a, cnt_b = _twopass_emit(
+        S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], max_pairs)
+    count = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
+                + np.sum(np.asarray(cnt_b), dtype=np.int64))
+    return pairs, count

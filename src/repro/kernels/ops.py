@@ -41,6 +41,8 @@ def _tile_counts(s_lo, s_hi, u_lo, u_hi, ts, tu, interpret):
 def bfm_count_pallas(S: Regions, U: Regions, *, ts: int = 256,
                      tu: int = 256, interpret: bool = False) -> int:
     """Total K via the tiled Pallas BFM kernel (any d, any n/m)."""
+    if S.n == 0 or U.n == 0:
+        return 0
     tiles = _tile_counts(S.lo, S.hi, U.lo, U.hi, ts, tu, interpret)
     return int(np.sum(np.asarray(tiles), dtype=np.int64))
 
@@ -56,8 +58,36 @@ def _mask_padded(s_lo, s_hi, u_lo, u_hi, ts, tu, interpret):
 def bfm_mask_pallas(S: Regions, U: Regions, *, ts: int = 256,
                     tu: int = 256, interpret: bool = False):
     """(n, m) bool overlap mask via the tiled Pallas kernel."""
+    if S.n == 0 or U.n == 0:
+        return jnp.zeros((S.n, U.n), jnp.bool_)
     full = _mask_padded(S.lo, S.hi, U.lo, U.hi, ts, tu, interpret)
     return full[: S.n, : U.n]
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs",))
+def _compact_mask_pairs(mask, max_pairs):
+    m = mask.shape[1]
+    flat = jnp.nonzero(mask.ravel(), size=max_pairs, fill_value=-1)[0]
+    s_idx = jnp.where(flat >= 0, flat // m, -1).astype(jnp.int32)
+    u_idx = jnp.where(flat >= 0, flat % m, -1).astype(jnp.int32)
+    return jnp.stack([s_idx, u_idx], axis=1), jnp.sum(mask, dtype=jnp.int32)
+
+
+def bfm_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
+                     ts: int = 256, tu: int = 256,
+                     interpret: bool = False):
+    """Enumerate overlapping pairs from the Pallas tile mask (any d).
+
+    Returns ``(pairs int32 (max_pairs, 2) −1-padded, exact count)``.
+    The mask tiles come from the Pallas kernel; compaction is an XLA
+    nonzero for now — a fused Pallas two-pass emit kernel is a ROADMAP
+    open item and slots in here without changing this signature.
+    """
+    if S.n == 0 or U.n == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    mask = bfm_mask_pallas(S, U, ts=ts, tu=tu, interpret=interpret)
+    pairs, count = _compact_mask_pairs(mask, max_pairs)
+    return pairs, int(count)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -77,6 +107,8 @@ def sbm_count_pallas(S: Regions, U: Regions, *, block: int = 2048,
                      interpret: bool = False) -> int:
     """Total K via sort (XLA) + Pallas sweep kernel. 1-D regions."""
     assert S.d == 1
+    if S.n == 0 or U.n == 0:
+        return 0
     c = _sweep(S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0],
                block, interpret)
     return int(np.sum(np.asarray(c), dtype=np.int64))

@@ -9,13 +9,23 @@ import numpy as np
 
 
 def interval_cases(n_cases: int = 25, max_n: int = 400, max_m: int = 400,
-                   d: int = 1, seed0: int = 1234):
+                   d: int = 1, seed0: int = 1234,
+                   include_empty: bool = False):
     """Yield (seed, s_lo, s_hi, u_lo, u_hi) randomized instances.
 
     Mix of regimes: dense overlap, sparse, duplicated coordinates
     (integer grids — tie-handling stress), tiny and degenerate-but-valid
-    (length epsilon) intervals.
+    (length epsilon) intervals.  ``include_empty`` prepends the three
+    empty-set cases (S empty, U empty, both empty).
     """
+    if include_empty:
+        empty = np.zeros((0, d), np.float32)
+        rng = np.random.default_rng(seed0 - 1)
+        lo = rng.uniform(0, 50, (5, d)).astype(np.float32)
+        hi = lo + rng.uniform(0.5, 5.0, (5, d)).astype(np.float32)
+        yield seed0 - 1, empty, empty, lo, hi
+        yield seed0 - 2, lo, hi, empty, empty
+        yield seed0 - 3, empty, empty, empty.copy(), empty.copy()
     for case in range(n_cases):
         seed = seed0 + case
         rng = np.random.default_rng(seed)

@@ -32,10 +32,8 @@ def test_dynamic_service_full_lifecycle():
         added, removed = svc.update_region(kind, idx, lo, hi)
         assert not (added & removed)
         # ledger always matches a from-scratch brute-force match
-        S2 = Regions(jnp.asarray(svc.s_lo)[:, None],
-                     jnp.asarray(svc.s_hi)[:, None])
-        U2 = Regions(jnp.asarray(svc.u_lo)[:, None],
-                     jnp.asarray(svc.u_hi)[:, None])
+        S2 = Regions(jnp.asarray(svc.s_lo), jnp.asarray(svc.s_hi))
+        U2 = Regions(jnp.asarray(svc.u_lo), jnp.asarray(svc.u_hi))
         mask = np.asarray(brute.bfm_mask(S2, U2))
         truth = {(int(a), int(b)) for a, b in zip(*np.nonzero(mask))}
         assert svc.pairs == truth, f"step={step}"

@@ -13,7 +13,7 @@ from repro.kernels import ref
 from repro.kernels import bfm as bfm_k
 from repro.kernels import sbm_sweep as sweep_k
 from repro.kernels.ops import (bfm_count_pallas, bfm_mask_pallas,
-                               sbm_count_pallas)
+                               bfm_pairs_pallas, sbm_count_pallas)
 from repro.core.sbm import _endpoint_stream
 
 from proputils import interval_cases, oracle_mask
@@ -60,6 +60,37 @@ def test_ops_padding_matches_core():
         mask = bfm_mask_pallas(S, U, ts=64, tu=64, interpret=True)
         assert mask.shape == (S.n, U.n)
         assert int(np.asarray(mask).sum()) == want, seed
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_bfm_pairs_pallas_matches_oracle(d):
+    rng = np.random.default_rng(29 + d)
+    n, m = 100, 90
+    s_lo = rng.uniform(0, 30, (n, d)).astype(np.float32)
+    s_hi = s_lo + rng.uniform(0.5, 6, (n, d)).astype(np.float32)
+    u_lo = rng.uniform(0, 30, (m, d)).astype(np.float32)
+    u_hi = u_lo + rng.uniform(0.5, 6, (m, d)).astype(np.float32)
+    S, U = make_regions(s_lo, s_hi), make_regions(u_lo, u_hi)
+    mask = oracle_mask(s_lo, s_hi, u_lo, u_hi)
+    want = {int(a) * m + int(b) for a, b in zip(*np.nonzero(mask))}
+    pairs, count = bfm_pairs_pallas(S, U, max_pairs=len(want) + 4,
+                                    ts=64, tu=64, interpret=True)
+    assert count == len(want)
+    arr = np.asarray(pairs)
+    arr = arr[arr[:, 0] >= 0]
+    assert {int(a) * m + int(b) for a, b in arr} == want
+
+
+def test_ops_empty_region_sets():
+    empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
+    S, U = paper_workload(seed=19, n_total=100, alpha=1.0)
+    assert bfm_count_pallas(empty, U, interpret=True) == 0
+    assert bfm_count_pallas(S, empty, interpret=True) == 0
+    assert sbm_count_pallas(empty, U, interpret=True) == 0
+    assert bfm_mask_pallas(empty, U, interpret=True).shape == (0, U.n)
+    pairs, count = bfm_pairs_pallas(empty, U, max_pairs=3, interpret=True)
+    assert count == 0 and pairs.shape == (3, 2)
+    assert (np.asarray(pairs) == -1).all()
 
 
 @pytest.mark.parametrize("block", [128, 512, 2048])

@@ -57,6 +57,23 @@ def test_count_matches_oracle_dd(algo, d):
         assert got == want, f"seed={seed} d={d} algo={algo}"
 
 
+def test_empty_sets_all_algos():
+    """Empty S or U: count 0 and a well-formed −1-padded pair buffer
+    (the old sbm path crashed on jnp.max of a zero-size array)."""
+    empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
+    full = make_regions(np.array([[1.0], [4.0]]), np.array([[3.0], [9.0]]))
+    for algo in COUNT_ALGOS:
+        assert match_count(empty, full, algo=algo) == 0, algo
+        assert match_count(full, empty, algo=algo) == 0, algo
+        assert match_count(empty, empty, algo=algo) == 0, algo
+    for algo in PAIR_ALGOS:
+        for S, U in ((empty, full), (full, empty), (empty, empty)):
+            pairs, count = match_pairs(S, U, max_pairs=3, algo=algo)
+            assert int(count) == 0, algo
+            assert pairs.shape == (3, 2), algo
+            assert (np.asarray(pairs) == -1).all(), algo
+
+
 def test_halfopen_touching_intervals_do_not_match():
     # [0,1) and [1,2) share only the boundary point -> no overlap
     S = make_regions(np.array([[0.0]]), np.array([[1.0]]))
