@@ -15,6 +15,13 @@ import numpy as np
 ROWS: list[tuple[str, float, str]] = []
 
 
+def plan_for(S, U, algo: str, **spec_kw):
+    """Engine plan for a benchmark workload (plan-once-call-many)."""
+    from repro.core import MatchSpec, build_plan
+
+    return build_plan(MatchSpec(algo=algo, **spec_kw), S.n, U.n, S.d)
+
+
 def bench(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     """Best-of-iters wall time in seconds (incl. building ancillary data
     structures, as the paper's WCT does; excludes input generation)."""

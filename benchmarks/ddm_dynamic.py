@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import DDMService, match_pairs, paper_workload
+from repro.core import DDMService, MatchSpec, build_plan, paper_workload
 
 from .common import bench, row
 
@@ -62,9 +62,10 @@ def run():
 
     for n_total, alpha in ((4096, 1.0), (4096, 100.0), (16384, 10.0)):
         S, U = paper_workload(seed=11, n_total=n_total, alpha=alpha)
-        _, k = match_pairs(S, U, max_pairs=1, algo="sbm")
-        cap = max(int(k), 1)
-        t = bench(lambda: match_pairs(S, U, max_pairs=cap, algo="sbm"))
+        plan = build_plan(MatchSpec(algo="sbm", capacity="exact"),
+                          S.n, U.n, S.d)
+        _, k = plan.pairs(S, U)
+        t = bench(plan.pairs, S, U)
         row(f"twopass_pairs_n{n_total}_a{alpha:g}", t, f"K={k}")
 
 

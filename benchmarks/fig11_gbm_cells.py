@@ -6,10 +6,10 @@ dedup replaces the res-set).  N scaled to CPU budget.
 """
 from __future__ import annotations
 
-from repro.core import paper_workload, match_count
+from repro.core import paper_workload
 from repro.core.grid import gbm_count
 
-from .common import bench, row
+from .common import bench, plan_for, row
 
 N = 100_000
 ALPHA = 100.0
@@ -17,7 +17,7 @@ ALPHA = 100.0
 
 def run():
     S, U = paper_workload(seed=7, n_total=N, alpha=ALPHA)
-    want = match_count(S, U, algo="sbm")
+    want = plan_for(S, U, "sbm").count(S, U)
     best = (None, float("inf"))
     for ncells in (30, 100, 300, 1000, 3000, 10000):
         t = bench(gbm_count, S, U, ncells=ncells, iters=2)

@@ -5,20 +5,23 @@ output-sensitive (grows with α).  Paper ranges 1e7–1e8 scale to
 """
 from __future__ import annotations
 
-from repro.core import paper_workload, match_count
+from repro.core import paper_workload
 
-from .common import bench, row
+from .common import bench, plan_for, row
 
 
 def run():
     # (a) WCT vs N at alpha = 100
     for n in (10_000, 100_000, 300_000, 1_000_000):
         S, U = paper_workload(seed=1, n_total=n, alpha=100.0)
-        t_itm = bench(match_count, S, U, algo="itm", iters=2)
-        t_sbm = bench(match_count, S, U, algo="sbm", iters=2)
-        t_bin = bench(match_count, S, U, algo="sbm_binary", iters=2)
-        k = match_count(S, U, algo="sbm")
-        assert k == match_count(S, U, algo="itm")
+        p_itm = plan_for(S, U, "itm")
+        p_sbm = plan_for(S, U, "sbm")
+        p_bin = plan_for(S, U, "sbm_binary")
+        t_itm = bench(p_itm.count, S, U, iters=2)
+        t_sbm = bench(p_sbm.count, S, U, iters=2)
+        t_bin = bench(p_bin.count, S, U, iters=2)
+        k = p_sbm.count(S, U)
+        assert k == p_itm.count(S, U)
         row(f"fig12a/itm_n{n}", t_itm, f"K={k}")
         row(f"fig12a/sbm_n{n}", t_sbm, f"K={k}")
         row(f"fig12a/sbm_binary_n{n}", t_bin, f"K={k}")
@@ -27,9 +30,11 @@ def run():
     n = 1_000_000
     for alpha in (0.01, 1.0, 100.0):
         S, U = paper_workload(seed=2, n_total=n, alpha=alpha)
-        t_itm = bench(match_count, S, U, algo="itm", iters=2)
-        t_sbm = bench(match_count, S, U, algo="sbm", iters=2)
-        k = match_count(S, U, algo="sbm")
-        assert k == match_count(S, U, algo="itm")
+        p_itm = plan_for(S, U, "itm")
+        p_sbm = plan_for(S, U, "sbm")
+        t_itm = bench(p_itm.count, S, U, iters=2)
+        t_sbm = bench(p_sbm.count, S, U, iters=2)
+        k = p_sbm.count(S, U)
+        assert k == p_itm.count(S, U)
         row(f"fig12b/itm_alpha{alpha}", t_itm, f"K={k}")
         row(f"fig12b/sbm_alpha{alpha}", t_sbm, f"K={k}")

@@ -8,9 +8,9 @@ GBM slowest of the three (grid skew), all counts identical.
 """
 from __future__ import annotations
 
-from repro.core import koln_like_workload, match_count
+from repro.core import koln_like_workload
 
-from .common import bench, row
+from .common import bench, plan_for, row
 
 N_POS = 60_000   # cluster-skewed regime; the paper's 541,222 positions
                   # scale down ~9x for the single-core budget (the claim
@@ -20,16 +20,13 @@ N_POS = 60_000   # cluster-skewed regime; the paper's 541,222 positions
 def run():
     S, U = koln_like_workload(seed=9, n_positions=N_POS)
     counts = {}
-    t = bench(match_count, S, U, algo="gbm", ncells=3000, iters=2)
-    counts["gbm"] = match_count(S, U, algo="gbm", ncells=3000)
-    row("fig14/gbm_wct_3000cells", t, f"K={counts['gbm']}")
-
-    t = bench(match_count, S, U, algo="itm", iters=2)
-    counts["itm"] = match_count(S, U, algo="itm")
-    row("fig14/itm_wct", t, f"K={counts['itm']}")
-
-    t = bench(match_count, S, U, algo="sbm", iters=2)
-    counts["sbm"] = match_count(S, U, algo="sbm")
-    row("fig14/sbm_wct", t, f"K={counts['sbm']}")
+    for algo, name, kw in (("gbm", "fig14/gbm_wct_3000cells",
+                            dict(ncells=3000)),
+                           ("itm", "fig14/itm_wct", {}),
+                           ("sbm", "fig14/sbm_wct", {})):
+        plan = plan_for(S, U, algo, **kw)
+        t = bench(plan.count, S, U, iters=2)
+        counts[algo] = plan.count(S, U)
+        row(name, t, f"K={counts[algo]}")
 
     assert len(set(counts.values())) == 1, counts

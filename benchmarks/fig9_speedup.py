@@ -16,11 +16,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import paper_workload, match_count
+from repro.core import paper_workload
 from repro.core.sbm import sbm_count_chunked, sbm_count_sweep
 from repro.kernels.ops import sbm_count_pallas
 
-from .common import bench, row
+from .common import bench, plan_for, row
 
 N_MAIN = 1_000_000
 N_BFM = 20_000
@@ -33,22 +33,20 @@ def run():
 
     counts = {}
 
-    t = bench(match_count, Sb, Ub, algo="bfm")
+    bfm_plan = plan_for(Sb, Ub, "bfm")
+    t = bench(bfm_plan.count, Sb, Ub)
     scale = (N_MAIN / N_BFM) ** 2
     row("fig9/bfm_wct_n2e4", t,
-        f"K={match_count(Sb, Ub, algo='bfm')};extrap_1e6_s={t*scale:.1f}")
+        f"K={bfm_plan.count(Sb, Ub)};extrap_1e6_s={t*scale:.1f}")
 
-    t = bench(match_count, S, U, algo="gbm", ncells=3000)
-    counts["gbm"] = match_count(S, U, algo="gbm", ncells=3000)
-    row("fig9/gbm_wct_1e6_3000cells", t, f"K={counts['gbm']}")
-
-    t = bench(match_count, S, U, algo="itm")
-    counts["itm"] = match_count(S, U, algo="itm")
-    row("fig9/itm_wct_1e6", t, f"K={counts['itm']}")
-
-    t = bench(match_count, S, U, algo="sbm")
-    counts["sbm"] = match_count(S, U, algo="sbm")
-    row("fig9/sbm_wct_1e6", t, f"K={counts['sbm']}")
+    for algo, name, kw in (("gbm", "fig9/gbm_wct_1e6_3000cells",
+                            dict(ncells=3000)),
+                           ("itm", "fig9/itm_wct_1e6", {}),
+                           ("sbm", "fig9/sbm_wct_1e6", {})):
+        plan = plan_for(S, U, algo, **kw)
+        t = bench(plan.count, S, U)
+        counts[algo] = plan.count(S, U)
+        row(name, t, f"K={counts[algo]}")
 
     t = bench(sbm_count_pallas, S, U, block=4096, interpret=True)
     counts["sbm_pallas"] = sbm_count_pallas(S, U, block=4096,

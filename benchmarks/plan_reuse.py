@@ -1,0 +1,60 @@
+"""Plan-reuse sweep: plan-once-call-many vs recompile-per-call.
+
+Quantifies what the MatchSpec → MatchPlan split buys: a reused plan
+amortizes tracing/compilation across calls (steady state is pure
+execution — ``plan.traces`` stays flat), while rebuilding a fresh
+``MatchPlan`` per call pays the trace every time (the pre-engine
+behavior whenever a caller re-derived capacities per call).
+
+Rows:
+  plan_reuse/{algo}_reused_n{N}    — one plan, many calls (us/call)
+  plan_reuse/{algo}_recompile_n{N} — fresh plan every call (us/call)
+  derived: exact K, retraces observed per call pattern
+"""
+from __future__ import annotations
+
+from repro.core import MatchSpec, paper_workload
+from repro.core.engine import MatchPlan
+
+from .common import bench, row
+
+ALGOS = ("sbm", "itm", "bfm")
+
+
+def _sweep(n_total: int, alpha: float, iters: int = 3):
+    S, U = paper_workload(seed=23, n_total=n_total, alpha=alpha)
+    for algo in ALGOS:
+        spec = MatchSpec(algo=algo, capacity="grow")
+        plan = MatchPlan(spec, S.n, U.n, S.d)
+        pairs, k = plan.pairs(S, U)            # warm the plan
+        warm = plan.traces
+
+        t_reuse = bench(plan.pairs, S, U, iters=iters)
+        reuse_traces = plan.traces - warm
+        row(f"plan_reuse/{algo}_reused_n{n_total}", t_reuse,
+            f"K={k};retraces_per_call={reuse_traces}")
+
+        def fresh_call():
+            p = MatchPlan(spec, S.n, U.n, S.d)  # no build_plan cache
+            return p.pairs(S, U)
+
+        t_fresh = bench(fresh_call, warmup=1, iters=iters)
+        row(f"plan_reuse/{algo}_recompile_n{n_total}", t_fresh,
+            f"K={k};speedup_from_reuse={t_fresh / max(t_reuse, 1e-9):.1f}x")
+
+
+def run():
+    _sweep(20_000, 10.0)
+    _sweep(100_000, 10.0)
+
+
+def run_smoke():
+    """CI smoke: one tiny sweep, assertions over parity and retraces."""
+    _sweep(512, 2.0, iters=1)
+
+
+if __name__ == "__main__":
+    from .common import emit_header
+
+    emit_header()
+    run()

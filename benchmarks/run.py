@@ -1,8 +1,13 @@
 """Benchmark runner — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only figX]``
+``PYTHONPATH=src python -m benchmarks.run [--only figX] [--smoke]``
 prints ``name,us_per_call,derived`` CSV (fig13 rows carry bytes — see
 the unit tag in `derived`).
+
+``--smoke`` is the CI mode: compile a MatchPlan and run one tiny sweep
+per backend available on CPU (``xla`` and interpret-mode ``pallas``),
+assert cross-backend parity, and time the plan-reuse pattern — minutes,
+not hours, so it runs on every PR.
 """
 from __future__ import annotations
 
@@ -11,7 +16,7 @@ import importlib
 import sys
 import time
 
-from .common import emit_header
+from .common import bench, emit_header, row
 
 MODULES = [
     "benchmarks.fig9_speedup",
@@ -20,22 +25,60 @@ MODULES = [
     "benchmarks.fig13_memory",
     "benchmarks.fig14_koln",
     "benchmarks.ddm_dynamic",
+    "benchmarks.plan_reuse",
 ]
+
+SMOKE_N = 2048
+SMOKE_ALGOS = ("bfm", "sbm", "itm")
+
+
+def smoke() -> None:
+    """Plan compilation + one tiny sweep per backend, with parity checks."""
+    from repro.core import MatchSpec, build_plan, paper_workload
+
+    S, U = paper_workload(seed=5, n_total=SMOKE_N, alpha=5.0)
+    want = None
+    for backend in ("xla", "pallas"):
+        for algo in SMOKE_ALGOS:
+            spec = MatchSpec(algo=algo, backend=backend, capacity="grow",
+                             interpret=(backend == "pallas"))
+            plan = build_plan(spec, S.n, U.n, S.d)
+            k = plan.count(S, U)
+            if want is None:
+                want = k
+            assert k == want, (algo, backend, k, want)
+            pairs, kp = plan.pairs(S, U)
+            assert kp == want, (algo, backend, kp, want)
+            warm = plan.traces
+            t = bench(plan.pairs, S, U, iters=2)
+            assert plan.traces == warm, (algo, backend, "retraced")
+            row(f"smoke/{algo}_{backend}_n{SMOKE_N}", t,
+                f"K={k};retraces=0")
+
+    from . import plan_reuse
+
+    plan_reuse.run_smoke()
+    print("# smoke_parity_ok", flush=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter, e.g. fig12")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny per-backend sweep + parity checks")
     args = ap.parse_args()
     emit_header()
     t0 = time.time()
-    for name in MODULES:
-        if args.only and args.only not in name:
-            continue
-        mod = importlib.import_module(name)
-        print(f"# {name}", flush=True)
-        mod.run()
+    if args.smoke:
+        smoke()
+    else:
+        for name in MODULES:
+            if args.only and args.only not in name:
+                continue
+            mod = importlib.import_module(name)
+            print(f"# {name}", flush=True)
+            mod.run()
     print(f"# total_wall_s,{time.time() - t0:.1f},", flush=True)
 
 

@@ -76,10 +76,10 @@ def main():
               f"(+{delta_add:3d}/-{delta_rm:3d} this tick)")
 
     # cross-check the incremental ledger against a from-scratch match
-    from repro.core import match_count
+    from repro.core import MatchSpec, build_plan
     S = make_regions(svc.s_lo, svc.s_hi)
     U = make_regions(svc.u_lo, svc.u_hi)
-    k = match_count(S, U, algo="sbm")
+    k = build_plan(MatchSpec(algo="sbm"), S.n, U.n, S.d).count(S, U)
     assert k == len(svc.pairs), (k, len(svc.pairs))
     print(f"\nledger == from-scratch SBM match ({k} routes); "
           f"{total_events} route-creation events delivered total")

@@ -4,8 +4,8 @@
 """
 import numpy as np
 
-from repro.core import (DDMService, make_regions, match_count,
-                        match_pairs, paper_workload, pairs_to_set)
+from repro.core import (DDMService, MatchSpec, build_plan, make_regions,
+                        paper_workload, pairs_to_set)
 
 # --- 1. the region matching problem (paper Fig. 3) -------------------------
 S = make_regions([[1.0, 1.0], [4.0, 0.5], [2.5, 2.0]],
@@ -13,22 +13,33 @@ S = make_regions([[1.0, 1.0], [4.0, 0.5], [2.5, 2.0]],
 U = make_regions([[2.0, 2.0], [4.5, 1.0]],
                  [[4.0, 4.0], [5.5, 3.0]])               # 2 updates
 
-print("== 2-D matching, all algorithms agree ==")
+print("== 2-D matching: one engine, interchangeable algorithms ==")
 for algo in ("bfm", "sbm", "itm"):
-    print(f"  {algo}: K = {match_count(S, U, algo=algo)}")
+    plan = build_plan(MatchSpec(algo=algo), S.n, U.n, S.d)
+    print(f"  {algo}: K = {plan.count(S, U)}")
 
-pairs, count = match_pairs(S, U, max_pairs=8, algo="sbm")
-print("  pairs:", sorted(pairs_to_set(pairs, U.n)),
+# plan once, call many: the compiled plan is reusable and never retraces
+plan = build_plan(MatchSpec(algo="sbm", capacity="exact"), S.n, U.n, S.d)
+pairs, count = plan.pairs(S, U)
+print("  pairs:", sorted(pairs_to_set(pairs, U.n, S.n)),
       "(ids = s_idx *", U.n, "+ u_idx)")
 
 # --- 2. the paper's synthetic benchmark at small scale ---------------------
 S1, U1 = paper_workload(seed=0, n_total=10_000, alpha=1.0)
-k = match_count(S1, U1, algo="sbm")
+plan1 = build_plan(MatchSpec(algo="sbm"), S1.n, U1.n, S1.d)
+k = plan1.count(S1, U1)
 print(f"\n== paper workload N=1e4 alpha=1: K = {k} "
       f"(E[K] ~ alpha*N/2 = {1.0 * 10_000 / 2:.0f}) ==")
 
+# backend is a config value: the same spec on the Pallas kernels
+# (interpret=True runs the kernel bodies on CPU; drop it on a real TPU)
+pplan = build_plan(MatchSpec(algo="sbm", backend="pallas", interpret=True),
+                   S1.n, U1.n, S1.d)
+assert pplan.count(S1, U1) == k
+print("   pallas backend agrees (interpret mode)")
+
 # --- 3. dynamic DDM (paper §3): move a region, get pair deltas -------------
-svc = DDMService(S1, U1)
+svc = DDMService(S1, U1)          # rides the same engine (ITM plan, grow)
 svc.connect()
 added, removed = svc.update_region("upd", 0, 100.0, 400.0)
 print(f"\n== dynamic update of one region: +{len(added)} / "

@@ -1,23 +1,49 @@
 """Core DDM matching library (the paper's contribution, in JAX).
 
+One engine, many matchers: the paper's family of interchangeable DDM
+algorithms (BFM, GBM, parallel SBM, ITM) sits behind a single
+plan/compile/execute API —
+
+    spec = MatchSpec(algo="sbm",        # bfm | gbm | sbm | sbm_chunked
+                                        # | sbm_binary | itm
+                     backend="xla",     # xla | pallas | distributed
+                     capacity="exact")  # exact | fixed | grow
+    plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
+    k         = plan.count(S, U)        # exact K, int64-safe
+    pairs, k  = plan.pairs(S, U)        # −1-padded static buffer
+    mask      = plan.mask(S, U)         # (n, m) bool overlap mask
+    ids, cnt  = plan.query(tree, opp, q_lo, q_hi)   # dynamic service
+
+A ``MatchSpec`` is frozen and hashable (algorithm, backend, capacity
+policy, tile/block sizes, mesh); ``build_plan`` memoizes compiled plans
+per problem shape, and a plan's executables are jit-cached so repeated
+calls never retrace (``plan.traces`` proves it).  Pair enumeration is
+the exact two-pass count-then-emit path — per-emitter counts,
+exclusive-scan offsets, parallel emit; under ``backend="pallas"`` the
+emit is one fused Mosaic kernel (``kernels.emit``).
+
 Public surface:
+    MatchSpec / MatchPlan / build_plan (repro.core.engine)
     Regions, make_regions, paper_workload, koln_like_workload
-    match_count / match_pairs / block_mask  (algo = bfm|gbm|sbm|itm|...)
-      — pair enumeration is the exact two-pass count-then-emit path
-        (per-emitter counts, exclusive-scan offsets, parallel emit)
-    DDMService (dynamic d-dim regions; batched ``update_regions`` churn)
-    distributed: shard_map multi-device SBM (core.distributed)
+    DDMService — dynamic d-dim regions (paper §3); batched
+        ``update_regions`` churn runs through the same MatchPlan
+    match_count / match_pairs / distributed_sbm_count — deprecated
+        shims over the engine (see docs/API.md for the migration table)
+    block_mask, pairs_to_set — helpers (not deprecated)
 """
 from .regions import (Regions, make_regions, paper_workload,
                       koln_like_workload, intersect_1d, intersect_dd)
-from .dd_match import (match_count, match_pairs, block_mask, pairs_to_set,
-                       ALGOS)
+from .engine import (ALGOS, BACKENDS, CAPACITY_POLICIES, MatchPlan,
+                     MatchSpec, build_plan)
+from .dd_match import match_count, match_pairs, block_mask, pairs_to_set
 from .dynamic import DDMService
 from . import brute, grid, itm, sbm
 
 __all__ = [
     "Regions", "make_regions", "paper_workload", "koln_like_workload",
-    "intersect_1d", "intersect_dd", "match_count", "match_pairs",
-    "block_mask", "pairs_to_set", "ALGOS", "DDMService",
-    "brute", "grid", "itm", "sbm",
+    "intersect_1d", "intersect_dd",
+    "MatchSpec", "MatchPlan", "build_plan",
+    "ALGOS", "BACKENDS", "CAPACITY_POLICIES",
+    "match_count", "match_pairs", "block_mask", "pairs_to_set",
+    "DDMService", "brute", "grid", "itm", "sbm",
 ]

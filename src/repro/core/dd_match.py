@@ -1,148 +1,77 @@
-"""Public DDM matching API — d-dimensional region matching (paper §2).
+"""Legacy DDM matching entry points — deprecation shims over the engine.
 
-The d>1 case reduces to d=1: two d-rectangles overlap iff their
-projections overlap on *every* dimension.  The paper combines per-
-dimension 1-D results with hash-set intersection; the TPU-idiomatic
-equivalent here is **match-then-verify**: enumerate candidate pairs on one
-dimension with the chosen 1-D algorithm (static-capacity buffers), then
-filter the candidates on the remaining dimensions with a vectorized
-gather + compare.  This does the same work as set intersection but with
-regular memory access (DESIGN.md §2).
+The d-dimensional matching implementation now lives in
+``repro.core.engine`` behind the plan/compile/execute API::
 
-Counting in d>1 requires pair identity, so it shares the enumeration path
-(except BFM, whose tiled mask already tests all dimensions at once).
+    spec = MatchSpec(algo="sbm", backend="xla", capacity="fixed",
+                     max_pairs=cap)
+    plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
+    pairs, k = plan.pairs(S, U)
+
+``match_count`` / ``match_pairs`` remain as thin shims (one
+``DeprecationWarning`` each, then a plan-cache hit) so examples and old
+benchmarks keep working mid-migration — see ``docs/API.md`` for the
+migration table.  ``block_mask`` and ``pairs_to_set`` are plain helpers,
+not deprecated.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import brute, grid, itm, sbm
+from .engine import ALGOS, MatchSpec, build_plan
 from .regions import Regions
 
 Array = jax.Array
 
-ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
+_DEPRECATION = ("%s is deprecated; build a MatchPlan instead: "
+                "plan = build_plan(MatchSpec(algo=...), n_sub, n_upd, d); "
+                "see docs/API.md")
 
 
-def _project(R: Regions, dim: int) -> Regions:
-    return Regions(R.lo[:, dim:dim + 1], R.hi[:, dim:dim + 1])
+def _legacy_spec(algo: str, max_pairs: int, kw: dict) -> MatchSpec:
+    if algo not in ALGOS:
+        raise ValueError(f"algo must be one of {ALGOS}")
+    fields = {}
+    for key in ("tile", "ncells", "p", "swap"):
+        if key in kw:
+            fields[key] = kw.pop(key)
+    if kw:
+        raise TypeError(f"unknown match kwargs: {sorted(kw)}")
+    return MatchSpec(algo=algo, backend="xla", capacity="fixed",
+                     max_pairs=max_pairs, **fields)
 
-
-# ---------------------------------------------------------------------------
-# counting
-# ---------------------------------------------------------------------------
 
 def match_count(S: Regions, U: Regions, algo: str = "sbm", *,
                 max_pairs: int | None = None, **kw) -> int:
-    """Total number of overlapping (subscription, update) pairs.
+    """Deprecated: use ``build_plan(spec, ...).count(S, U)``.
 
-    Always exact.  For d > 1 the dim-0 candidate buffer is sized from the
-    *exact* dim-0 pair count (binary-search SBM per-sub counts), so there
-    is no overflow path; a caller-supplied ``max_pairs`` only ever grows
-    the buffer.
+    Total number of overlapping (subscription, update) pairs — always
+    exact; ``max_pairs`` never affects the result (kept for signature
+    compatibility).
     """
-    if algo not in ALGOS:
-        raise ValueError(f"algo must be one of {ALGOS}")
-    if S.n == 0 or U.n == 0:
-        return 0
-    if S.d == 1:
-        if algo == "bfm":
-            return brute.bfm_count(S, U, **kw)
-        if algo == "gbm":
-            return grid.gbm_count(S, U, **kw)
-        if algo == "sbm":
-            return sbm.sbm_count_sweep(S, U)
-        if algo == "sbm_chunked":
-            return sbm.sbm_count_chunked(S, U, **kw)
-        if algo == "sbm_binary":
-            return sbm.sbm_count_binary(S, U)
-        if algo == "itm":
-            return itm.itm_count(S, U, **kw)
-    if algo == "bfm":
-        return brute.bfm_count(S, U, **kw)  # mask tests all dims at once
-    # match dim 0 (exact, exactly-sized candidate buffer inside
-    # match_pairs), verify the rest; the count is exact regardless of the
-    # output buffer size.
-    pairs, count = match_pairs(S, U, max_pairs=max_pairs or 1,
-                               algo=algo, **kw)
-    return int(count)
-
-
-def _candidate_bound(S: Regions, U: Regions) -> int:
-    """Exact dim-0 candidate count (binary-search SBM per-sub counts)."""
-    c = sbm.sbm_count_per_sub(_project(S, 0), _project(U, 0))
-    return max(int(np.sum(np.asarray(c), dtype=np.int64)), 1)
-
-
-# ---------------------------------------------------------------------------
-# pair enumeration
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("max_pairs",))
-def _verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):
-    """Filter dim-0 candidate pairs on dimensions 1..d-1, recompact."""
-    s_idx, u_idx = cand[:, 0], cand[:, 1]
-    valid = s_idx >= 0
-    si = jnp.maximum(s_idx, 0)
-    ui = jnp.maximum(u_idx, 0)
-    ok = jnp.all(
-        jnp.logical_and(S.lo[si, 1:] < U.hi[ui, 1:],
-                        U.lo[ui, 1:] < S.hi[si, 1:]), axis=-1)
-    ok = ok & valid
-    count = jnp.sum(ok, dtype=jnp.int32)
-    keep = jnp.nonzero(ok, size=max_pairs, fill_value=-1)[0]
-    out = jnp.where(keep[:, None] >= 0, cand[jnp.maximum(keep, 0)], -1)
-    return out, count
+    warnings.warn(_DEPRECATION % "match_count", DeprecationWarning,
+                  stacklevel=2)
+    spec = _legacy_spec(algo, max_pairs or 1, dict(kw))
+    return build_plan(spec, S.n, U.n, S.d).count(S, U)
 
 
 def match_pairs(S: Regions, U: Regions, max_pairs: int,
                 algo: str = "sbm", **kw):
-    """Enumerate overlapping pairs, each exactly once, −1-padded buffer.
+    """Deprecated: use ``build_plan(spec, ...).pairs(S, U)``.
 
-    Returns ``(pairs int32 (max_pairs, 2), count)``.  ``count`` is the
-    exact number of overlaps (int64-safe); if it exceeds ``max_pairs``
-    the buffer is truncated (caller decides whether that is an overflow).
-    Empty S or U yields a well-formed all-−1 buffer with count 0 for
-    every algorithm.
+    Enumerate overlapping pairs, each exactly once, into a −1-padded
+    ``(max_pairs, 2)`` buffer; ``count`` is the exact K (truncation is
+    the caller's overflow decision).  Identical semantics to the
+    engine's ``capacity="fixed"`` policy.
     """
-    if algo not in ALGOS:
-        raise ValueError(f"algo must be one of {ALGOS}")
-    if S.n == 0 or U.n == 0:
-        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
-    if algo == "bfm" or (S.d > 1 and algo == "gbm"):
-        return brute.bfm_pairs(S, U, max_pairs)
-    S0, U0 = _project(S, 0), _project(U, 0)
-    # d > 1: the dim-0 candidate buffer must hold EVERY dim-0 overlap or
-    # verification would silently drop true pairs — size it from the
-    # exact dim-0 count, independent of the caller's output cap.
-    cand_cap = max_pairs if S.d == 1 else _candidate_bound(S, U)
-    if algo in ("sbm", "sbm_chunked", "sbm_binary"):
-        cand, ccount = sbm.sbm_pairs(S0, U0, cand_cap, **kw)
-    elif algo == "itm":
-        T = itm.build_tree(S0)
-        counts = itm.itm_query_counts(T, U0.lo[:, 0], U0.hi[:, 0])
-        cap = max(int(np.max(np.asarray(counts), initial=0)), 1)
-        ids, _ = itm.itm_query_pairs(T, U0.lo[:, 0], U0.hi[:, 0], cap)
-        nq = ids.shape[0]
-        u_idx = jnp.broadcast_to(
-            jnp.arange(nq, dtype=jnp.int32)[:, None], ids.shape)
-        flat_ok = (ids >= 0).ravel()
-        sel = jnp.nonzero(flat_ok, size=cand_cap, fill_value=-1)[0]
-        s_sel = jnp.where(sel >= 0, ids.ravel()[jnp.maximum(sel, 0)], -1)
-        u_sel = jnp.where(sel >= 0, u_idx.ravel()[jnp.maximum(sel, 0)], -1)
-        cand = jnp.stack([s_sel, u_sel], axis=1)
-        ccount = int(np.sum(np.asarray(counts), dtype=np.int64))
-    elif algo == "gbm":
-        return brute.bfm_pairs(S, U, max_pairs)
-    else:
-        raise ValueError(f"algo must be one of {ALGOS}")
-    if S.d == 1:
-        return cand, ccount
-    return _verify_dims(S, U, cand, max_pairs)
+    warnings.warn(_DEPRECATION % "match_pairs", DeprecationWarning,
+                  stacklevel=2)
+    spec = _legacy_spec(algo, max_pairs, dict(kw))
+    return build_plan(spec, S.n, U.n, S.d).pairs(S, U)
 
 
 # ---------------------------------------------------------------------------
@@ -157,8 +86,22 @@ def block_mask(q_lo: Array, q_hi: Array, kv_lo: Array, kv_hi: Array
                            kv_lo[None, :] < q_hi[:, None])
 
 
-def pairs_to_set(pairs: Array, m: int) -> set[int]:
-    """Host-side helper: −1-padded (k,2) pair buffer → {s*m+u} set."""
+def pairs_to_set(pairs: Array, m: int, n: int | None = None) -> set[int]:
+    """Host-side helper: −1-padded (k, 2) pair buffer → ``{s*m + u}`` set.
+
+    Validates every non-pad pair against the region-set sizes: update
+    indices must lie in ``[0, m)`` and, when ``n`` is given,
+    subscription indices in ``[0, n)`` — out-of-range indices used to
+    alias silently under the ``s*m + u`` encoding.
+    """
     arr = np.asarray(pairs)
-    arr = arr[arr[:, 0] >= 0]
+    keep = arr[:, 0] >= 0
+    arr = arr[keep]
+    if arr.size:
+        if int(arr[:, 1].min()) < 0 or int(arr[:, 1].max()) >= m:
+            raise ValueError(
+                f"update index out of range [0, {m}) in pair buffer")
+        if n is not None and int(arr[:, 0].max()) >= n:
+            raise ValueError(
+                f"subscription index out of range [0, {n}) in pair buffer")
     return set((arr[:, 0].astype(np.int64) * m + arr[:, 1]).tolist())

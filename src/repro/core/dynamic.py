@@ -16,8 +16,9 @@ Array adaptation, three deviations from the pointer version:
   (``itm.itm_query_pairs_dd``).
 * **Batched churn**: real workloads move many regions per tick.
   ``update_regions`` takes a whole batch of moved regions and runs ONE
-  vmapped tree query for all old extents plus all new extents — a single
-  device round-trip per tick instead of two per region.  Moves of one
+  batched tree query (``MatchPlan.query`` — the same engine path the
+  static matchers use) for all old extents plus all new extents — a
+  single device round-trip per tick instead of two per region.  Moves of one
   kind never touch the tree being queried (pairs are sub×upd, and the
   opposite kind's tree is the one walked), so a batch is exactly
   equivalent to a sequence of single updates.
@@ -32,28 +33,31 @@ int64-encoded keys, not with per-region Python loops.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
 from . import itm
+from .engine import MatchPlan, MatchSpec
 from .regions import Regions
-
-
-def _cap_pow2(x: int) -> int:
-    """Round a query capacity up to a power of two (bounds recompiles of
-    the static-``cap`` query kernel to O(lg max_count) distinct shapes)."""
-    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
 class DDMService:
     """Stateful pub/sub matching service over d-dimensional regions.
 
-    ``cap_hint`` floors the per-query id-buffer capacity (rounded up to a
-    power of two), so steady-state churn reuses one compiled query kernel
-    instead of recompiling whenever the max per-query count drifts.
+    The per-tick batched tree query runs through a ``MatchPlan`` built
+    from ``spec`` (default: ITM with the grow-by-doubling capacity
+    policy), so the service shares the engine's compiled executables and
+    capacity memoization instead of a private query path.  ``cap_hint``
+    floors the per-query id-buffer capacity (rounded up to a power of
+    two by the grow policy), so steady-state churn reuses one compiled
+    query kernel instead of recompiling whenever the max per-query count
+    drifts.
     """
 
-    def __init__(self, S: Regions, U: Regions, cap_hint: int = 64):
+    def __init__(self, S: Regions, U: Regions, cap_hint: int = 64,
+                 spec: MatchSpec | None = None):
         assert S.d == U.d, (S.d, U.d)
         self.d = S.d
         self.s_lo = np.asarray(S.lo, np.float32).copy()   # (n, d)
@@ -63,6 +67,17 @@ class DDMService:
         self._tree_S = None
         self._tree_U = None
         self.cap_hint = cap_hint
+        if spec is None:
+            spec = MatchSpec(algo="itm", capacity="grow",
+                             max_pairs=cap_hint)
+        elif spec.max_pairs is None:
+            # cap_hint floors the per-query capacity unless the caller's
+            # spec pins max_pairs explicitly
+            spec = dataclasses.replace(spec, max_pairs=cap_hint)
+        self.spec = spec
+        # the plan is per-service (not build_plan-cached): its memoized
+        # grow capacity tracks THIS service's churn history
+        self.plan = MatchPlan(spec, S.n, U.n, self.d)
         self.pairs: set[tuple[int, int]] = set()
 
     # -- tree cache ---------------------------------------------------------
@@ -86,21 +101,18 @@ class DDMService:
     def _overlap_ids(self, kind: str, q_lo: np.ndarray,
                      q_hi: np.ndarray) -> np.ndarray:
         """(b, cap) −1-padded ids of the OPPOSITE kind overlapping each of
-        the b query boxes, verified on all d dimensions."""
+        the b query boxes, verified on all d dimensions (one
+        ``MatchPlan.query`` call — the engine's dynamic-service path)."""
         if kind == "sub":
-            tree, o_lo, o_hi = self.tree_U(), self.u_lo, self.u_hi
+            tree, opp = self.tree_U(), self._U()
         else:
-            tree, o_lo, o_hi = self.tree_S(), self.s_lo, self.s_hi
+            tree, opp = self.tree_S(), self._S()
         b = q_lo.shape[0]
-        if b == 0 or o_lo.shape[0] == 0:
+        if b == 0 or opp.n == 0:
             return np.full((b, 1), -1, np.int32)
-        ql = jnp.asarray(q_lo, jnp.float32)
-        qh = jnp.asarray(q_hi, jnp.float32)
-        counts0 = itm.itm_query_counts(tree, ql[:, 0], qh[:, 0])
-        cap = _cap_pow2(max(int(np.max(np.asarray(counts0), initial=0)),
-                            self.cap_hint, 1))
-        ids, _ = itm.itm_query_pairs_dd(
-            tree, jnp.asarray(o_lo), jnp.asarray(o_hi), ql, qh, cap)
+        ids, _ = self.plan.query(tree, opp,
+                                 jnp.asarray(q_lo, jnp.float32),
+                                 jnp.asarray(q_hi, jnp.float32))
         return np.asarray(ids)
 
     # -- full match (service bring-up) ---------------------------------------

@@ -1,0 +1,455 @@
+"""Unified MatchSpec → MatchPlan engine — one plan/compile/execute API.
+
+The paper's deliverable is a *family* of interchangeable DDM matchers
+(BFM, GBM, parallel SBM, ITM) evaluated under one harness; this module
+makes algorithm and backend choice a **config value** instead of five
+divergent call paths:
+
+    spec = MatchSpec(algo="sbm", backend="pallas", capacity="grow")
+    plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
+    k = plan.count(S, U)
+    pairs, k = plan.pairs(S, U)          # −1-padded static buffer
+    ids, cnt = plan.query(tree, opp, q_lo, q_hi)   # dynamic service path
+
+A ``MatchSpec`` is a frozen, hashable description of *how* to match
+(algorithm, backend, capacity policy, tile/block sizes, mesh).
+``build_plan`` compiles it once for a problem shape ``(n_sub, n_upd, d)``
+into a ``MatchPlan`` whose executables are jit-cached per plan: repeated
+calls with the same shapes and resolved capacities never retrace (the
+plan's ``traces`` counter is incremented only at trace time, so tests —
+and users — can assert zero retraces in steady state).  All paths are
+empty-set-safe: zero-region inputs yield count 0 and well-formed all-−1
+buffers without touching the device kernels.
+
+Backends
+--------
+``xla``          pure-jnp reference implementations (``brute``, ``grid``,
+                 ``sbm``, ``itm``) — always available.
+``pallas``       Mosaic TPU kernels where one exists for the algorithm
+                 (BFM tile count/mask/pairs, SBM sweep count, and the
+                 fused two-pass emit kernel for SBM pair enumeration);
+                 stages without a kernel (sorts, tree walks,
+                 verification) run on XLA.  ``interpret=True`` runs the
+                 kernel bodies on CPU (tests / CI smoke).
+``distributed``  multi-device parallel SBM counting under ``shard_map``
+                 (paper §4); ``count()`` only — pair buffers are not
+                 sharded yet (ROADMAP).
+
+Capacity policies (static buffer sizing for ``pairs()``/``query()``)
+--------------------------------------------------------------------
+``exact``  run the cheap counting pass first, size the buffer to exactly
+           K.  Never truncates; retraces whenever K changes.
+``fixed``  caller-supplied ``max_pairs``; truncation reports the true K
+           (old ``match_pairs`` semantics).  Never retraces.
+``grow``   grow-by-doubling: power-of-two buffer, re-executed doubled on
+           overflow and memoized, so steady-state churn reuses one
+           compiled kernel and a stream of calls retraces O(lg max K)
+           times total.  Floored at ``max_pairs`` when given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import brute, grid, itm, sbm
+from .regions import Regions
+
+Array = jax.Array
+
+ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
+BACKENDS = ("xla", "pallas", "distributed")
+CAPACITY_POLICIES = ("exact", "fixed", "grow")
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchSpec:
+    """Frozen, hashable description of *how* to match.
+
+    ``algo``/``backend``/``capacity`` select the path; the remaining
+    fields are per-algorithm tunables (the paper's knobs) with the same
+    defaults the old entry points used.  Hashability is what lets
+    ``build_plan`` memoize compiled plans.
+    """
+
+    algo: str = "sbm"
+    backend: str = "xla"
+    capacity: str = "exact"
+    max_pairs: int | None = None   # fixed cap / grow floor
+    tile: int = 4096               # BFM xla U-tile
+    ncells: int = 3000             # GBM grid cells
+    p: int = 8                     # chunked-SBM segments
+    swap: str = "auto"             # ITM build-side policy
+    ts: int = 256                  # Pallas BFM tile sizes
+    tu: int = 256
+    block: int = 2048              # Pallas sweep/emit block
+    interpret: bool = False        # Pallas interpret mode (CPU)
+    overprovision: float = 2.5     # distributed bucket slack
+    mesh: Any = None               # jax.sharding.Mesh for distributed
+
+    def __post_init__(self):
+        if self.algo not in ALGOS:
+            raise ValueError(f"algo must be one of {ALGOS}, got {self.algo}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend}")
+        if self.capacity not in CAPACITY_POLICIES:
+            raise ValueError(
+                f"capacity must be one of {CAPACITY_POLICIES}, "
+                f"got {self.capacity}")
+        if self.capacity == "fixed" and self.max_pairs is None:
+            raise ValueError("capacity='fixed' requires max_pairs")
+
+
+class MatchPlan:
+    """Compiled matcher for one ``(spec, n_sub, n_upd, d)`` problem shape.
+
+    Executables are built lazily on first use and cached on the plan;
+    ``traces`` counts device-side (re)traces — steady-state calls with
+    stable shapes and capacities leave it unchanged.
+    """
+
+    def __init__(self, spec: MatchSpec, n_sub: int, n_upd: int, d: int):
+        if d < 1:
+            raise ValueError(f"d must be >= 1, got {d}")
+        self.spec = spec
+        self.n_sub = int(n_sub)
+        self.n_upd = int(n_upd)
+        self.d = int(d)
+        self.traces = 0
+        self._exec: dict[str, Any] = {}
+        self._cap: int | None = None        # memoized output capacity
+        self._cand_cap: int | None = None   # memoized dim-0 candidate cap
+        self._query_cap = max(spec.max_pairs or 1, 1)
+
+    def __repr__(self) -> str:
+        s = self.spec
+        return (f"MatchPlan(algo={s.algo}, backend={s.backend}, "
+                f"capacity={s.capacity}, n_sub={self.n_sub}, "
+                f"n_upd={self.n_upd}, d={self.d})")
+
+    # -- plumbing -----------------------------------------------------------
+    def _check(self, S: Regions, U: Regions):
+        if (S.n, U.n) != (self.n_sub, self.n_upd) or S.d != self.d:
+            raise ValueError(
+                f"plan compiled for (n_sub={self.n_sub}, n_upd={self.n_upd},"
+                f" d={self.d}); got (n_sub={S.n}, n_upd={U.n}, d={S.d})")
+
+    def _jitted(self, name: str, fn, static_argnames=()):
+        """Per-plan jitted executable with a trace counter."""
+        cached = self._exec.get(name)
+        if cached is None:
+            plan = self
+
+            def counting(*args, **kw):
+                plan.traces += 1
+                return fn(*args, **kw)
+
+            cached = jax.jit(counting, static_argnames=static_argnames)
+            self._exec[name] = cached
+        return cached
+
+    def _resolve_cap(self, exact_k: int) -> int:
+        """Output-buffer capacity under the plan's policy."""
+        pol = self.spec.capacity
+        if pol == "fixed":
+            return max(self.spec.max_pairs, 1)
+        if pol == "exact":
+            self._cap = max(exact_k, 1)
+            return self._cap
+        cap = _pow2(max(exact_k, self.spec.max_pairs or 1, 1))
+        self._cap = max(self._cap or 1, cap)
+        return self._cap
+
+    def _resolve_cand_cap(self, exact_c: int) -> int:
+        """Dim-0 candidate capacity (must hold EVERY dim-0 overlap)."""
+        if self.spec.capacity == "grow":
+            self._cand_cap = max(self._cand_cap or 1, _pow2(max(exact_c, 1)))
+            return self._cand_cap
+        self._cand_cap = max(exact_c, 1)
+        return self._cand_cap
+
+    def _project(self, R: Regions) -> Regions:
+        return Regions(R.lo[:, :1], R.hi[:, :1])
+
+    # -- counting -----------------------------------------------------------
+    def count(self, S: Regions, U: Regions) -> int:
+        """Exact number of overlapping (subscription, update) pairs."""
+        self._check(S, U)
+        spec = self.spec
+        if S.n == 0 or U.n == 0:
+            return 0
+        if spec.backend == "distributed":
+            return self._count_distributed(S, U)
+        if spec.algo == "bfm":
+            return self._count_bfm(S, U)
+        if self.d == 1:
+            return self._count_1d(S, U)
+        # d > 1: counting requires pair identity (match-then-verify);
+        # the count is exact regardless of the 1-slot output buffer.
+        _, k = self._pairs_impl(S, U, out_cap=1)
+        return k
+
+    def _count_bfm(self, S: Regions, U: Regions) -> int:
+        spec = self.spec
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            return ops.bfm_count_pallas(S, U, ts=spec.ts, tu=spec.tu,
+                                        interpret=spec.interpret)
+        f = self._jitted(
+            "bfm_count",
+            functools.partial(brute.bfm_count_per_sub, tile=spec.tile))
+        return int(np.sum(np.asarray(f(S, U)), dtype=np.int64))
+
+    def _count_1d(self, S: Regions, U: Regions) -> int:
+        spec = self.spec
+        algo = spec.algo
+        if spec.backend == "pallas" and algo in ("sbm", "sbm_chunked"):
+            from ..kernels import ops
+            return ops.sbm_count_pallas(S, U, block=spec.block,
+                                        interpret=spec.interpret)
+        if algo == "sbm":
+            f = self._jitted("sbm_contribs", sbm._sweep_contribs)
+            c = f(S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0])
+            return int(np.sum(np.asarray(c), dtype=np.int64))
+        if algo == "sbm_chunked":
+            f = self._jitted("sbm_chunked", sbm._chunked_contribs,
+                             static_argnames=("p",))
+            c = f(S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], p=spec.p)
+            return int(np.sum(np.asarray(c), dtype=np.int64))
+        if algo == "sbm_binary":
+            f = self._jitted("sbm_per_sub", sbm.sbm_count_per_sub)
+            return int(np.sum(np.asarray(f(S, U)), dtype=np.int64))
+        if algo == "itm":
+            build_on_S = (S.n <= U.n if spec.swap == "auto"
+                          else spec.swap == "S")
+            T = itm.build_tree(S if build_on_S else U)
+            Q = U if build_on_S else S
+            f = self._jitted("itm_counts", itm.itm_query_counts)
+            c = f(T, Q.lo[:, 0], Q.hi[:, 0])
+            return int(np.sum(np.asarray(c), dtype=np.int64))
+        if algo == "gbm":
+            return grid.gbm_count(S, U, ncells=spec.ncells)
+        raise AssertionError(algo)
+
+    def _count_distributed(self, S: Regions, U: Regions) -> int:
+        spec = self.spec
+        if spec.algo not in ("sbm", "sbm_chunked", "sbm_binary"):
+            raise ValueError(
+                "distributed backend implements parallel SBM counting; "
+                f"algo={spec.algo!r} is not supported")
+        if self.d != 1:
+            raise ValueError("distributed backend is 1-D (paper §4)")
+        from .distributed import _distributed_count
+        return _distributed_count(S, U, mesh=spec.mesh,
+                                  overprovision=spec.overprovision)
+
+    # -- pair enumeration ---------------------------------------------------
+    def pairs(self, S: Regions, U: Regions):
+        """Enumerate overlaps: ``(pairs int32 (cap, 2) −1-padded, count)``.
+
+        ``cap`` is resolved by the capacity policy; ``count`` is always
+        the exact K (python int) even when a fixed buffer truncates.
+        """
+        self._check(S, U)
+        spec = self.spec
+        if spec.backend == "distributed":
+            raise NotImplementedError(
+                "distributed backend supports count() only (ROADMAP: "
+                "sharded pair buffers)")
+        if S.n == 0 or U.n == 0:
+            cap = self._resolve_cap(0)
+            return jnp.full((cap, 2), -1, jnp.int32), 0
+        if spec.capacity == "exact":
+            # the counting pass runs only when no capacity is memoized
+            # yet; steady-state calls emit directly (every path reports
+            # the exact K) and re-emit once if K drifted.
+            cap = self._cap
+            if cap is None:
+                cap = self._resolve_cap(self.count(S, U))
+            pairs, k = self._pairs_impl(S, U, out_cap=cap)
+            if max(k, 1) != cap:
+                cap = self._resolve_cap(k)
+                pairs, k = self._pairs_impl(S, U, out_cap=cap)
+            return pairs, k
+        if spec.capacity == "fixed":
+            return self._pairs_impl(S, U, out_cap=self._resolve_cap(0))
+        # grow-by-doubling: every path reports the exact K, so at most
+        # one re-execution with the doubled (power-of-two) buffer.
+        cap = self._resolve_cap(0)
+        pairs, k = self._pairs_impl(S, U, out_cap=cap)
+        if k > cap:
+            cap = self._resolve_cap(k)
+            pairs, k = self._pairs_impl(S, U, out_cap=cap)
+        return pairs, k
+
+    def _pairs_impl(self, S: Regions, U: Regions, out_cap: int):
+        """(pairs, exact K) with a caller-resolved output capacity."""
+        spec = self.spec
+        algo = spec.algo
+        if algo == "bfm" or algo == "gbm":
+            # GBM degenerates to BFM for enumeration (paper: per-cell
+            # matching IS brute force; pair identity needs no grid).
+            return self._pairs_bfm(S, U, out_cap)
+        if algo in ("sbm", "sbm_chunked", "sbm_binary"):
+            cand, k = self._pairs_sbm_dim0(
+                S, U, out_cap if self.d == 1 else self._cand_bound(S, U))
+        elif algo == "itm":
+            cand, k = self._pairs_itm_dim0(
+                S, U, out_cap if self.d == 1 else self._cand_bound(S, U))
+        else:
+            raise AssertionError(algo)
+        if self.d == 1:
+            return cand, k
+        f = self._jitted("verify", sbm_verify_dims,
+                         static_argnames=("max_pairs",))
+        pairs, count = f(S, U, cand, max_pairs=out_cap)
+        return pairs, int(count)
+
+    def _cand_bound(self, S: Regions, U: Regions) -> int:
+        """Exact dim-0 candidate count (binary-search per-sub counts)."""
+        f = self._jitted("cand_per_sub", sbm.sbm_count_per_sub)
+        c = f(self._project(S), self._project(U))
+        return self._resolve_cand_cap(
+            int(np.sum(np.asarray(c), dtype=np.int64)))
+
+    def _pairs_bfm(self, S: Regions, U: Regions, out_cap: int):
+        spec = self.spec
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            pairs, count = ops.bfm_pairs_pallas(
+                S, U, out_cap, ts=spec.ts, tu=spec.tu,
+                interpret=spec.interpret)
+            return pairs, int(count)
+        f = self._jitted("bfm_pairs", brute.bfm_pairs,
+                         static_argnames=("max_pairs",))
+        pairs, count = f(S, U, max_pairs=out_cap)
+        return pairs, int(count)
+
+    def _pairs_sbm_dim0(self, S: Regions, U: Regions, cap: int):
+        spec = self.spec
+        S0, U0 = self._project(S), self._project(U)
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            return ops.twopass_pairs_pallas(S0, U0, cap, block=spec.block,
+                                            interpret=spec.interpret)
+        f = self._jitted("twopass_emit", sbm._twopass_emit,
+                         static_argnames=("max_pairs",))
+        pairs, cnt_a, cnt_b = f(S0.lo[:, 0], S0.hi[:, 0],
+                                U0.lo[:, 0], U0.hi[:, 0], max_pairs=cap)
+        k = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
+                + np.sum(np.asarray(cnt_b), dtype=np.int64))
+        return pairs, k
+
+    def _pairs_itm_dim0(self, S: Regions, U: Regions, cap: int):
+        T = itm.build_tree(self._project(S))
+        fc = self._jitted("itm_counts", itm.itm_query_counts)
+        counts = fc(T, U.lo[:, 0], U.hi[:, 0])
+        per_q = max(int(np.max(np.asarray(counts), initial=0)), 1)
+        if self.spec.capacity == "grow":   # bound retraces under drift
+            per_q = _pow2(per_q)
+        fp = self._jitted("itm_flatten", itm_flatten_pairs,
+                          static_argnames=("per_q", "cap"))
+        cand = fp(T, U.lo[:, 0], U.hi[:, 0], per_q=per_q, cap=cap)
+        k = int(np.sum(np.asarray(counts), dtype=np.int64))
+        return cand, k
+
+    # -- masks --------------------------------------------------------------
+    def mask(self, S: Regions, U: Regions) -> Array:
+        """(n, m) boolean overlap mask (algorithm-independent)."""
+        self._check(S, U)
+        spec = self.spec
+        if spec.backend == "distributed":
+            raise NotImplementedError(
+                "distributed backend supports count() only")
+        if S.n == 0 or U.n == 0:
+            return jnp.zeros((S.n, U.n), jnp.bool_)
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            return ops.bfm_mask_pallas(S, U, ts=spec.ts, tu=spec.tu,
+                                       interpret=spec.interpret)
+        f = self._jitted("mask", brute.bfm_mask)
+        return f(S, U)
+
+    # -- dynamic-service batched query (paper §3) ---------------------------
+    def query(self, tree: itm.ITree, opp: Regions, q_lo: Array,
+              q_hi: Array):
+        """Verified d-dim overlap ids for a batch of query boxes.
+
+        ``tree`` indexes dim 0 of the ``opp`` regions; ``q_lo``/``q_hi``
+        are (b, d).  Returns ``(ids (b, cap) −1-padded, counts (b,))``
+        with ``cap`` resolved by the capacity policy (``grow`` memoizes
+        a power-of-two cap so steady-state churn reuses one compiled
+        query kernel — the DDMService path).
+        """
+        b = int(q_lo.shape[0])
+        if b == 0 or opp.n == 0:
+            z = jnp.full((b, 1), -1, jnp.int32)
+            return z, jnp.zeros((b,), jnp.int32)
+        fc = self._jitted("itm_counts", itm.itm_query_counts)
+        counts0 = fc(tree, q_lo[:, 0], q_hi[:, 0])
+        need = max(int(np.max(np.asarray(counts0), initial=0)), 1)
+        pol = self.spec.capacity
+        if pol == "fixed":
+            cap = max(self.spec.max_pairs, 1)
+        elif pol == "exact":
+            cap = need
+        else:
+            self._query_cap = max(self._query_cap, _pow2(need))
+            cap = self._query_cap
+        fq = self._jitted("itm_query_dd", itm.itm_query_pairs_dd,
+                          static_argnames=("cap",))
+        return fq(tree, opp.lo, opp.hi, q_lo, q_hi, cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# engine-level device helpers (shared by plans; jitted per plan)
+# ---------------------------------------------------------------------------
+
+def sbm_verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):
+    """Filter dim-0 candidate pairs on dimensions 1..d-1, recompact."""
+    s_idx, u_idx = cand[:, 0], cand[:, 1]
+    valid = s_idx >= 0
+    si = jnp.maximum(s_idx, 0)
+    ui = jnp.maximum(u_idx, 0)
+    ok = jnp.all(
+        jnp.logical_and(S.lo[si, 1:] < U.hi[ui, 1:],
+                        U.lo[ui, 1:] < S.hi[si, 1:]), axis=-1)
+    ok = ok & valid
+    count = jnp.sum(ok, dtype=jnp.int32)
+    keep = jnp.nonzero(ok, size=max_pairs, fill_value=-1)[0]
+    out = jnp.where(keep[:, None] >= 0, cand[jnp.maximum(keep, 0)], -1)
+    return out, count
+
+
+def itm_flatten_pairs(T: itm.ITree, q_lo: Array, q_hi: Array, per_q: int,
+                      cap: int) -> Array:
+    """Tree-walk all queries, flatten (query, id) hits into (cap, 2)."""
+    ids, _ = itm.itm_query_pairs(T, q_lo, q_hi, per_q)
+    nq = ids.shape[0]
+    u_idx = jnp.broadcast_to(
+        jnp.arange(nq, dtype=jnp.int32)[:, None], ids.shape)
+    flat_ok = (ids >= 0).ravel()
+    sel = jnp.nonzero(flat_ok, size=cap, fill_value=-1)[0]
+    s_sel = jnp.where(sel >= 0, ids.ravel()[jnp.maximum(sel, 0)], -1)
+    u_sel = jnp.where(sel >= 0, u_idx.ravel()[jnp.maximum(sel, 0)], -1)
+    return jnp.stack([s_sel, u_sel], axis=1)
+
+
+@functools.lru_cache(maxsize=256)
+def build_plan(spec: MatchSpec, n_sub: int, n_upd: int, d: int) -> MatchPlan:
+    """Compile ``spec`` for a problem shape; memoized on all arguments.
+
+    Returns the same ``MatchPlan`` (with its warm jit caches and resolved
+    capacities) for repeated identical requests — plan-once-call-many is
+    the intended usage, and the deprecation shims lean on this cache.
+    """
+    return MatchPlan(spec, n_sub, n_upd, d)

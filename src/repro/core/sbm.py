@@ -193,15 +193,23 @@ def sbm_count_binary(S: Regions, U: Regions) -> int:
 # when the true K exceeds the buffer; the exact K is summed host-side in
 # int64 from the unclipped per-emitter counts.)
 
-@partial(jax.jit, static_argnames=("max_pairs",))
-def _twopass_emit(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
-    n, m = s_lo.shape[0], u_lo.shape[0]
+def _twopass_phase1(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
+    """Pass 1 of count-then-emit: per-emitter counts and slot offsets.
+
+    Returns ``(perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b)``:
+    ``starts`` is the concatenated per-emitter input offsets (aA for the n
+    class-A emitters, bB for the m class-B emitters), ``counts`` the
+    concatenated unclipped per-emitter pair counts, ``offs`` the
+    (n+m+1,) exclusive-scan output offsets saturated at ``max_pairs``.
+    Shared by the XLA pass-2 (``_twopass_emit``) and the fused Pallas
+    emit kernel (``kernels.ops.twopass_pairs_pallas``).
+    """
     perm_u = jnp.argsort(u_lo).astype(jnp.int32)
     perm_s = jnp.argsort(s_lo).astype(jnp.int32)
     u_lo_sorted = u_lo[perm_u]
     s_lo_sorted = s_lo[perm_s]
 
-    # pass 1: exact per-emitter counts (A: one emitter per s; B: per u)
+    # exact per-emitter counts (A: one emitter per s; B: per u)
     aA = jnp.searchsorted(u_lo_sorted, s_lo, side="left").astype(jnp.int32)
     rA = jnp.searchsorted(u_lo_sorted, s_hi, side="left").astype(jnp.int32)
     bB = jnp.searchsorted(s_lo_sorted, u_lo, side="right").astype(jnp.int32)
@@ -215,11 +223,21 @@ def _twopass_emit(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
     # exclusive-scan offsets, saturating at max_pairs: offsets below the
     # buffer limit stay exact; emitters wholly past it land on the limit
     # and are never selected by the slot lookup.
+    starts = jnp.concatenate([aA, bB])
     counts = jnp.concatenate([cnt_a, cnt_b])
     lim = jnp.int32(max_pairs)
     incl = jax.lax.associative_scan(
         lambda a, b: jnp.minimum(a + b, lim), counts)
     offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), incl])
+    return perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b
+
+
+@partial(jax.jit, static_argnames=("max_pairs",))
+def _twopass_emit(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_phase1(
+        s_lo, s_hi, u_lo, u_hi, max_pairs)
+    aA, bB = starts[:n], starts[n:]
 
     # pass 2: one thread per output slot
     t = jnp.arange(max_pairs, dtype=jnp.int32)

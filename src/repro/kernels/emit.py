@@ -1,0 +1,122 @@
+"""Fused two-pass emit — pass 2 of count-then-emit as one Pallas kernel.
+
+Pass 1 of the exact pair enumeration (``core.sbm._twopass_phase1``)
+produces per-emitter counts and saturated exclusive-scan output offsets
+on the XLA side (sort + searchsorted are already near-roofline there).
+Pass 2 — the slot→(emitter, rank) lookup and the pair write — was an
+XLA ``searchsorted`` + two gathers with three HBM round-trips between
+them; here it is ONE kernel: the grid walks the output buffer in
+(1, B) blocks, each program binary-searches the offset table held in
+VMEM for its B slots (lg(n+m) steps, all lanes in lock-step), derives
+the emitter-local rank, and writes both pair halves — offsets, counts,
+start table and the two sort permutations are read once into VMEM and
+reused by every program.
+
+Slot semantics match the XLA pass 2 bit-for-bit: slot ``t`` belongs to
+the last emitter ``e`` with ``offs[e] <= t``; its rank is
+``t − offs[e]``; ranks at or beyond the emitter's count (saturated
+region, or ``t`` past the total) emit the −1 pad.  Class-A emitters
+(``e < n``) own subscription ``e`` and read the update id from the
+lo-sorted U permutation; class-B emitters own update ``e − n`` and read
+the subscription id from the lo-sorted S permutation.
+
+Lane-dim tables are padded to 128 multiples with sentinels (offsets:
+INT32_MAX/2, never ≤ any slot id; counts/starts: 0) so padding can never
+be selected by the search.
+
+VMEM budget: the five tables are ≈ (3·(n+m) + n + m) int32 words held
+resident for the whole grid; the ``kernels.ops`` wrapper routes problems
+past its byte budget to the bit-identical XLA pass 2 (streaming the
+tables through double-buffered DMA is the ROADMAP follow-up for
+n+m ≫ 1e6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_PAD_OFF = (1 << 30)  # > any slot id; padded offsets are never selected
+DEF_BLOCK = 512
+
+
+def _emit_kernel(offs_ref, counts_ref, starts_ref, perm_s_ref, perm_u_ref,
+                 s_out_ref, u_out_ref, *, n: int, m: int, block: int):
+    i = pl.program_id(0)
+    E = n + m
+    offs = offs_ref[0, :]
+    counts = counts_ref[0, :]
+    starts = starts_ref[0, :]
+
+    t = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    t = t[0, :]
+
+    # binary search: largest e in [0, E] with offs[e] <= t  (== the XLA
+    # searchsorted(offs, t, side="right") - 1; offs[0] == 0 <= t always)
+    lo = jnp.zeros_like(t)
+    hi = jnp.full_like(t, E)
+    for _ in range(max(E.bit_length(), 1)):
+        mid = (lo + hi + 1) >> 1
+        go_right = jnp.take(offs, mid) <= t
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid - 1)
+    e = lo
+
+    j = t - jnp.take(offs, e)
+    e_c = jnp.minimum(e, E - 1)
+    valid = (e < E) & (j >= 0) & (j < jnp.take(counts, e_c))
+    start = jnp.take(starts, e_c)
+    is_a = e_c < n
+    u_from_a = jnp.take(perm_u_ref[0, :], jnp.clip(start + j, 0, m - 1))
+    s_from_b = jnp.take(perm_s_ref[0, :], jnp.clip(start + j, 0, n - 1))
+    s_idx = jnp.where(valid, jnp.where(is_a, e_c, s_from_b), -1)
+    u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, e_c - n), -1)
+    s_out_ref[0, :] = s_idx
+    u_out_ref[0, :] = u_idx
+
+
+def _pad_lanes(x, fill, mult: int = 128):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+    return x.reshape(1, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "max_pairs", "block",
+                                    "interpret"))
+def twopass_emit(offs, counts, starts, perm_s, perm_u, *, n: int, m: int,
+                 max_pairs: int, block: int = DEF_BLOCK,
+                 interpret: bool = False):
+    """Pass-2 pair write: (max_pairs, 2) int32, −1 padded.
+
+    ``offs`` is the (n+m+1,) saturated exclusive scan from pass 1,
+    ``counts``/``starts`` the (n+m,) per-emitter tables, ``perm_s``/
+    ``perm_u`` the lo-sort permutations.  Output slot order is identical
+    to the XLA pass 2 in ``core.sbm._twopass_emit``.
+    """
+    bl = min(block, max(128, max_pairs))
+    t_pad = (-max_pairs) % bl
+    total = max_pairs + t_pad
+    grid = (total // bl,)
+    offs_p = _pad_lanes(offs, _PAD_OFF)
+    counts_p = _pad_lanes(counts, 0)
+    starts_p = _pad_lanes(starts, 0)
+    perm_s_p = _pad_lanes(perm_s, 0)
+    perm_u_p = _pad_lanes(perm_u, 0)
+
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0, 0))
+    s_out, u_out = pl.pallas_call(
+        functools.partial(_emit_kernel, n=n, m=m, block=bl),
+        grid=grid,
+        in_specs=[full(offs_p), full(counts_p), full(starts_p),
+                  full(perm_s_p), full(perm_u_p)],
+        out_specs=(pl.BlockSpec((1, bl), lambda i: (0, i)),
+                   pl.BlockSpec((1, bl), lambda i: (0, i))),
+        out_shape=(jax.ShapeDtypeStruct((1, total), jnp.int32),
+                   jax.ShapeDtypeStruct((1, total), jnp.int32)),
+        interpret=interpret,
+    )(offs_p, counts_p, starts_p, perm_s_p, perm_u_p)
+    return jnp.stack([s_out[0, :max_pairs], u_out[0, :max_pairs]], axis=1)

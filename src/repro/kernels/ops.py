@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.regions import Regions
-from ..core.sbm import _endpoint_stream
+from ..core.sbm import _endpoint_stream, _twopass_phase1
 from . import bfm as bfm_kernel
+from . import emit as emit_kernel
 from . import sbm_sweep as sweep_kernel
 
 
@@ -88,6 +89,50 @@ def bfm_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
     mask = bfm_mask_pallas(S, U, ts=ts, tu=tu, interpret=interpret)
     pairs, count = _compact_mask_pairs(mask, max_pairs)
     return pairs, int(count)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs",))
+def _twopass_tables(s_lo, s_hi, u_lo, u_hi, max_pairs):
+    perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_phase1(
+        s_lo, s_hi, u_lo, u_hi, max_pairs)
+    return perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b
+
+
+# the emit kernel keeps all five lookup tables VMEM-resident (shared by
+# every grid step); past this byte budget they cannot fit beside the
+# output block on a real TPU core, so fall back to the XLA pass 2
+# (streaming the tables by DMA is the ROADMAP follow-up)
+_EMIT_VMEM_TABLE_BUDGET = 8 << 20
+
+
+def twopass_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
+                         block: int = emit_kernel.DEF_BLOCK,
+                         interpret: bool = False):
+    """Exact 1-D pair enumeration, pass 2 fused into one Pallas kernel.
+
+    Pass 1 (sort + searchsorted counts + saturated offset scan) stays on
+    XLA; the slot→(emitter, rank) lookup and the pair write run as the
+    ``kernels.emit`` Mosaic kernel.  Same contract as
+    ``core.sbm.sbm_pairs``: ``(pairs int32 (max_pairs, 2) −1-padded,
+    exact count)``, truncation reports the true K.  Problem sizes whose
+    lookup tables exceed the per-core VMEM budget (~(3·(n+m) + n + m)
+    int32 words) take the bit-identical XLA pass 2 instead.
+    """
+    assert S.d == 1
+    if S.n == 0 or U.n == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    table_bytes = 4 * (3 * (S.n + U.n + 1) + S.n + U.n)
+    if table_bytes > _EMIT_VMEM_TABLE_BUDGET:
+        from ..core.sbm import sbm_pairs
+        return sbm_pairs(S, U, max_pairs)
+    perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_tables(
+        S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], max_pairs)
+    pairs = emit_kernel.twopass_emit(
+        offs, counts, starts, perm_s, perm_u, n=S.n, m=U.n,
+        max_pairs=max_pairs, block=block, interpret=interpret)
+    count = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
+                + np.sum(np.asarray(cnt_b), dtype=np.int64))
+    return pairs, count
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -21,7 +21,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import Regions, block_mask, match_pairs
+from ..core import (MatchSpec, Regions, block_mask,
+                    build_plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,17 +80,18 @@ def block_windows(plan: BlockPlan):
     """Per-q-block contiguous kv token ranges (starts, ends) int32 (nq,).
 
     Derived from the DDM pair enumeration (not re-derived arithmetic):
-    enumerate (q-block, kv-block) matches with ``core.match_pairs``,
-    reduce each q row to its [min, max] matched kv block.  The sink
+    enumerate (q-block, kv-block) matches with an engine ``MatchPlan``
+    (exact-capacity SBM), reduce each q row to its [min, max] matched kv
+    block.  The sink
     prefix is carried separately (``plan.sink_end``).
     """
     S = _q_subscriptions(plan)
     U = _kv_updates(plan)
-    cap = int(plan.nq * (plan.window // plan.block_kv + 3))
-    pairs, count = match_pairs(S, U, max_pairs=cap, algo="sbm")
+    mplan = build_plan(MatchSpec(algo="sbm", capacity="exact"),
+                       S.n, U.n, S.d)
+    pairs, count = mplan.pairs(S, U)
     pairs = np.asarray(pairs)
     pairs = pairs[pairs[:, 0] >= 0]
-    assert int(count) <= cap, "window plan overflow"
     starts = np.full(plan.nq, np.iinfo(np.int32).max, np.int64)
     ends = np.zeros(plan.nq, np.int64)
     np.minimum.at(starts, pairs[:, 0], pairs[:, 1] * plan.block_kv)

@@ -50,17 +50,23 @@ def test_dynamic_delta_is_local():
 
 
 DIST_SCRIPT = textwrap.dedent("""
-    import os
+    import os, warnings
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
-    from repro.core import paper_workload, match_count
+    from repro.core import MatchSpec, build_plan, paper_workload
     from repro.core.distributed import distributed_sbm_count
     for seed, n, a in [(0, 2000, 10.0), (1, 5000, 1.0), (2, 4096, 100.0),
                        (3, 130, 0.01), (4, 999, 1.0)]:
         S, U = paper_workload(seed=seed, n_total=n, alpha=a)
-        ref = match_count(S, U, algo="sbm")
-        got = distributed_sbm_count(S, U)
+        ref = build_plan(MatchSpec(algo="sbm"), S.n, U.n, 1).count(S, U)
+        dplan = build_plan(MatchSpec(algo="sbm", backend="distributed"),
+                           S.n, U.n, 1)
+        got = dplan.count(S, U)
         assert ref == got, (seed, ref, got)
+        # the legacy shim routes through the same engine path
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert distributed_sbm_count(S, U) == ref, seed
     print("DIST_OK")
 """)
 

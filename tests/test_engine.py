@@ -1,0 +1,225 @@
+"""MatchSpec → MatchPlan engine: parity with the legacy entry points,
+zero-retrace plan reuse, capacity policies, and deprecation shims.
+
+Acceptance (ISSUE 2): for every algo and every backend available on CPU
+(``xla``, interpret-mode ``pallas``), ``plan.pairs()`` equals the old
+``match_pairs`` pair set on randomized d ∈ {1, 2, 3} workloads, and a
+repeated call never retraces (checked via the plan's trace counter).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (ALGOS, DDMService, MatchSpec, build_plan,
+                        koln_like_workload, make_regions, match_count,
+                        match_pairs, paper_workload, pairs_to_set)
+from repro.core import brute
+from repro.core.distributed import distributed_sbm_count
+
+from proputils import interval_cases, oracle_mask
+
+BACKENDS_ON_CPU = ("xla", "pallas")
+
+
+def _spec(algo, backend, **kw):
+    """CPU-testable spec: small Pallas tiles, interpret mode."""
+    kw.setdefault("capacity", "grow")
+    return MatchSpec(algo=algo, backend=backend, ts=64, tu=64, block=512,
+                     interpret=(backend == "pallas"), **kw)
+
+
+def _legacy_pairs_set(S, U, algo, k):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pairs, count = match_pairs(S, U, max_pairs=max(k, 1) + 3, algo=algo)
+    return pairs_to_set(pairs, max(U.n, 1), max(S.n, 1)), int(count)
+
+
+# ---------------------------------------------------------------------------
+# parity with the legacy API (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("d", (1, 2, 3))
+def test_plan_pairs_match_legacy(algo, backend, d):
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(
+            n_cases=3, d=d, max_n=120, max_m=120):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        want_k = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
+        want_set, legacy_k = _legacy_pairs_set(S, U, algo, want_k)
+        assert legacy_k == want_k, f"seed={seed}"
+        plan = build_plan(_spec(algo, backend), S.n, U.n, d)
+        assert plan.count(S, U) == want_k, f"seed={seed}"
+        pairs, k = plan.pairs(S, U)
+        assert k == want_k, f"seed={seed} {algo}/{backend} d={d}"
+        assert pairs_to_set(pairs, U.n, S.n) == want_set, \
+            f"seed={seed} {algo}/{backend} d={d}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_plan_zero_retrace_on_repeat(algo, backend):
+    S, U = paper_workload(seed=31, n_total=240, alpha=4.0, d=2)
+    plan = build_plan(_spec(algo, backend, p=4), S.n, U.n, S.d)
+    pairs1, k1 = plan.pairs(S, U)
+    _ = plan.count(S, U)
+    warm = plan.traces
+    for _ in range(3):
+        pairs2, k2 = plan.pairs(S, U)
+        _ = plan.count(S, U)
+    assert plan.traces == warm, (algo, backend, plan.traces, warm)
+    assert k2 == k1
+    np.testing.assert_array_equal(np.asarray(pairs1), np.asarray(pairs2))
+
+
+def test_plan_mask_parity():
+    S, U = paper_workload(seed=33, n_total=200, alpha=6.0, d=2)
+    want = np.asarray(brute.bfm_mask(S, U))
+    for backend in BACKENDS_ON_CPU:
+        plan = build_plan(_spec("bfm", backend), S.n, U.n, S.d)
+        np.testing.assert_array_equal(np.asarray(plan.mask(S, U)), want)
+
+
+# ---------------------------------------------------------------------------
+# capacity policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_capacity_policies_identical_pair_sets(algo):
+    cases = [paper_workload(seed=61, n_total=300, alpha=5.0),
+             paper_workload(seed=62, n_total=200, alpha=3.0, d=2),
+             koln_like_workload(seed=63, n_positions=200)]
+    for S, U in cases:
+        exact = build_plan(_spec(algo, "xla", capacity="exact"),
+                           S.n, U.n, S.d)
+        grow = build_plan(_spec(algo, "xla", capacity="grow"),
+                          S.n, U.n, S.d)
+        pe, ke = exact.pairs(S, U)
+        pg, kg = grow.pairs(S, U)
+        assert ke == kg
+        assert pe.shape[0] == max(ke, 1)      # exact: buffer is exactly K
+        assert pg.shape[0] >= ke and _ispow2(pg.shape[0])
+        assert pairs_to_set(pe, U.n, S.n) == pairs_to_set(pg, U.n, S.n)
+
+
+def _ispow2(x):
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("capacity", ("exact", "grow"))
+def test_capacity_policies_edge_regions(algo, capacity):
+    empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
+    one = make_regions(np.array([[1.0]]), np.array([[4.0]]))
+    for S, U, want in ((empty, one, 0), (one, empty, 0),
+                       (empty, empty, 0), (one, one, 1)):
+        plan = build_plan(_spec(algo, "xla", capacity=capacity),
+                          S.n, U.n, 1)
+        assert plan.count(S, U) == want, (algo, capacity)
+        pairs, k = plan.pairs(S, U)
+        assert k == want, (algo, capacity)
+        got = pairs_to_set(pairs, max(U.n, 1), max(S.n, 1))
+        assert len(got) == want, (algo, capacity)
+
+
+def test_grow_policy_doubles_and_memoizes():
+    S, U = paper_workload(seed=64, n_total=400, alpha=20.0)
+    plan = build_plan(
+        MatchSpec(algo="sbm", capacity="grow", max_pairs=4), S.n, U.n, 1)
+    pairs, k = plan.pairs(S, U)
+    assert k > 4 and pairs.shape[0] >= k and _ispow2(pairs.shape[0])
+    warm = plan.traces
+    pairs2, _ = plan.pairs(S, U)          # steady state: no regrow
+    assert plan.traces == warm
+    assert pairs2.shape == pairs.shape
+
+
+def test_fixed_policy_truncates_but_reports_exact():
+    S, U = paper_workload(seed=65, n_total=400, alpha=20.0)
+    true_k = build_plan(_spec("sbm", "xla"), S.n, U.n, 1).count(S, U)
+    plan = build_plan(
+        MatchSpec(algo="sbm", capacity="fixed", max_pairs=5), S.n, U.n, 1)
+    pairs, k = plan.pairs(S, U)
+    assert k == true_k and true_k > 5
+    assert pairs.shape == (5, 2)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims + pairs_to_set validation (satellites)
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn_and_agree():
+    S, U = paper_workload(seed=66, n_total=200, alpha=4.0)
+    plan = build_plan(_spec("sbm", "xla"), S.n, U.n, 1)
+    want = plan.count(S, U)
+    with pytest.warns(DeprecationWarning):
+        assert match_count(S, U, algo="sbm") == want
+    with pytest.warns(DeprecationWarning):
+        pairs, k = match_pairs(S, U, max_pairs=want + 1, algo="sbm")
+    assert int(k) == want
+    with pytest.warns(DeprecationWarning):
+        assert distributed_sbm_count(S, U) == want
+
+
+def test_pairs_to_set_validates_both_sizes():
+    good = np.array([[0, 1], [2, 0], [-1, -1]], np.int32)
+    assert pairs_to_set(good, 2, 3) == {1, 4}
+    with pytest.raises(ValueError):
+        pairs_to_set(np.array([[0, 2]], np.int32), 2, 3)   # u out of range
+    with pytest.raises(ValueError):
+        pairs_to_set(np.array([[3, 1]], np.int32), 2, 3)   # s out of range
+    # m-only call keeps the old signature working (u still validated)
+    assert pairs_to_set(good, 2) == {1, 4}
+    with pytest.raises(ValueError):
+        pairs_to_set(np.array([[0, 5]], np.int32), 2)
+
+
+# ---------------------------------------------------------------------------
+# dynamic service rides the same plan
+# ---------------------------------------------------------------------------
+
+def test_ddmservice_uses_engine_plan_and_stays_exact():
+    S, U = paper_workload(seed=67, n_total=160, alpha=5.0, d=2)
+    svc = DDMService(S, U, spec=MatchSpec(algo="itm", capacity="grow",
+                                          max_pairs=8))
+    svc.connect()
+    rng = np.random.default_rng(3)
+    for kind in ("sub", "upd", "sub"):
+        idx = rng.choice(40, size=9, replace=False)
+        lo = rng.uniform(0, 9e5, (9, 2)).astype(np.float32)
+        hi = lo + rng.uniform(1.0, 5e4, (9, 2)).astype(np.float32)
+        svc.update_regions(kind, idx, lo, hi)
+    mask = np.asarray(brute.bfm_mask(
+        make_regions(svc.s_lo, svc.s_hi), make_regions(svc.u_lo, svc.u_hi)))
+    truth = {(int(a), int(b)) for a, b in zip(*np.nonzero(mask))}
+    assert svc.pairs == truth
+    assert svc.plan.traces > 0            # the queries ran through the plan
+    # cap_hint floors the query capacity when the spec leaves it unset
+    svc2 = DDMService(S, U, cap_hint=128,
+                      spec=MatchSpec(algo="itm", capacity="grow"))
+    assert svc2.spec.max_pairs == 128
+
+
+def test_exact_policy_skips_count_pass_in_steady_state():
+    S, U = paper_workload(seed=68, n_total=300, alpha=5.0)
+    plan = build_plan(MatchSpec(algo="itm", capacity="exact"),
+                      S.n, U.n, 1)
+    p1, k1 = plan.pairs(S, U)             # first call: count + emit
+    warm = plan.traces
+    p2, k2 = plan.pairs(S, U)             # steady state: emit only
+    assert plan.traces == warm and k1 == k2
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        MatchSpec(algo="nope")
+    with pytest.raises(ValueError):
+        MatchSpec(backend="gpu")
+    with pytest.raises(ValueError):
+        MatchSpec(capacity="fixed")       # fixed requires max_pairs
+    with pytest.raises(ValueError):
+        MatchSpec(capacity="bounded")

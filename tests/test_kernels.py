@@ -8,13 +8,14 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import paper_workload, make_regions, match_count
+from repro.core import MatchSpec, build_plan, paper_workload, make_regions
 from repro.kernels import ref
 from repro.kernels import bfm as bfm_k
 from repro.kernels import sbm_sweep as sweep_k
 from repro.kernels.ops import (bfm_count_pallas, bfm_mask_pallas,
-                               bfm_pairs_pallas, sbm_count_pallas)
-from repro.core.sbm import _endpoint_stream
+                               bfm_pairs_pallas, sbm_count_pallas,
+                               twopass_pairs_pallas)
+from repro.core.sbm import _endpoint_stream, sbm_pairs
 
 from proputils import interval_cases, oracle_mask
 
@@ -106,6 +107,69 @@ def test_sbm_sweep_kernel_vs_ref(block):
 def test_sbm_count_pallas_end_to_end():
     for n_total, alpha in [(1000, 0.01), (2000, 1.0), (3000, 100.0)]:
         S, U = paper_workload(seed=17, n_total=n_total, alpha=alpha)
-        want = match_count(S, U, algo="sbm")
+        want = build_plan(MatchSpec(algo="sbm"), S.n, U.n, 1).count(S, U)
         got = sbm_count_pallas(S, U, block=512, interpret=True)
         assert got == want, (n_total, alpha)
+
+
+# ---------------------------------------------------------------------------
+# fused two-pass emit kernel (kernels.emit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [128, 512])
+def test_twopass_emit_kernel_bitexact_vs_xla(block):
+    """The Pallas pass 2 must reproduce the XLA pass 2 slot-for-slot,
+    including truncation (saturated offsets) and −1 padding."""
+    rng = np.random.default_rng(71)
+    for trial in range(4):
+        n, m = int(rng.integers(1, 400)), int(rng.integers(1, 400))
+        s_lo = rng.uniform(0, 50, (n, 1)).astype(np.float32)
+        s_hi = s_lo + rng.uniform(0.5, 10, (n, 1)).astype(np.float32)
+        u_lo = rng.uniform(0, 50, (m, 1)).astype(np.float32)
+        u_hi = u_lo + rng.uniform(0.5, 10, (m, 1)).astype(np.float32)
+        S, U = make_regions(s_lo, s_hi), make_regions(u_lo, u_hi)
+        for cap in (1, 9, 4096):
+            want_p, want_c = sbm_pairs(S, U, cap)
+            got_p, got_c = twopass_pairs_pallas(S, U, cap, block=block,
+                                                interpret=True)
+            assert got_c == want_c, (trial, cap)
+            np.testing.assert_array_equal(np.asarray(got_p),
+                                          np.asarray(want_p))
+
+
+def test_twopass_emit_kernel_duplicate_endpoints():
+    rng = np.random.default_rng(73)
+    s_lo = rng.integers(0, 12, (150, 1)).astype(np.float32)
+    s_hi = s_lo + rng.integers(1, 5, (150, 1)).astype(np.float32)
+    u_lo = rng.integers(0, 12, (130, 1)).astype(np.float32)
+    u_hi = u_lo + rng.integers(1, 5, (130, 1)).astype(np.float32)
+    S, U = make_regions(s_lo, s_hi), make_regions(u_lo, u_hi)
+    mask = oracle_mask(s_lo, s_hi, u_lo, u_hi)
+    k = int(mask.sum())
+    pairs, count = twopass_pairs_pallas(S, U, k + 5, interpret=True)
+    assert count == k
+    arr = np.asarray(pairs)
+    arr = arr[arr[:, 0] >= 0]
+    got = {(int(a), int(b)) for a, b in arr}
+    assert got == {(int(a), int(b)) for a, b in zip(*np.nonzero(mask))}
+
+
+def test_twopass_emit_vmem_fallback(monkeypatch):
+    """Past the VMEM table budget the wrapper must route to the
+    bit-identical XLA pass 2 instead of an uncompilable kernel."""
+    import repro.kernels.ops as ops
+    S, U = paper_workload(seed=75, n_total=300, alpha=10.0)
+    want_p, want_c = sbm_pairs(S, U, 2048)
+    monkeypatch.setattr(ops, "_EMIT_VMEM_TABLE_BUDGET", 64)
+    got_p, got_c = twopass_pairs_pallas(S, U, 2048, interpret=True)
+    assert got_c == want_c
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_twopass_emit_kernel_empty_sets():
+    empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
+    S, _ = paper_workload(seed=74, n_total=60, alpha=1.0)
+    for A, B in ((empty, S), (S, empty), (empty, empty)):
+        pairs, count = twopass_pairs_pallas(A, B, 4, interpret=True)
+        assert count == 0 and pairs.shape == (4, 2)
+        assert (np.asarray(pairs) == -1).all()
