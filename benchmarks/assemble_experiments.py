@@ -1,6 +1,14 @@
-"""Splice the live roofline table + dry-run summary into EXPERIMENTS.md.
+"""Splice the live roofline table + dry-run summary + benchmark
+trajectory into EXPERIMENTS.md.
 
     PYTHONPATH=src python -m benchmarks.assemble_experiments
+
+Sections are anchored by HTML-comment markers; the benchmark trajectory
+is built from any ``BENCH_*.json`` files in the repo root (the records
+``benchmarks.run --out`` writes and the CI bench-smoke job uploads), via
+``roofline.bench_table`` — so the committed experiment log and the CI
+artifact share one formatter.  A missing EXPERIMENTS.md is created from
+a stub so the tool works on a fresh checkout.
 """
 from __future__ import annotations
 
@@ -13,6 +21,8 @@ from pathlib import Path
 from . import roofline
 
 MARK = "<!-- ROOFLINE_TABLE -->"
+BENCH_MARK = "<!-- BENCH_TRAJECTORY -->"
+STUB = ("# EXPERIMENTS\n\n" + MARK + "\n\n" + BENCH_MARK + "\n")
 
 
 def table(mesh: str) -> str:
@@ -30,6 +40,8 @@ def table(mesh: str) -> str:
 def summary() -> str:
     recs = [json.loads(p.read_text())
             for p in Path("experiments/dryrun").glob("*.json")]
+    if not recs:
+        return "**Status: no dry-run records (experiments/dryrun empty).**\n"
     ok = sum(1 for r in recs if r.get("status") == "ok")
     skip = sum(1 for r in recs if r.get("status") == "skipped")
     err = sum(1 for r in recs if r.get("status") == "error")
@@ -45,17 +57,29 @@ def summary() -> str:
             f"{worst[3]} at {worst[0] / 1e9:.1f} GB.**\n")
 
 
+def bench_section() -> str:
+    paths = sorted(Path(".").glob("BENCH_*.json"))
+    if not paths:
+        return (BENCH_MARK + "\n\n(no BENCH_*.json records yet — run "
+                "`python -m benchmarks.run --smoke --out BENCH_smoke.json`)\n")
+    return (BENCH_MARK + "\n\n### Benchmark trajectory\n\n"
+            + roofline.bench_table(paths))
+
+
 def main():
-    md = Path("EXPERIMENTS.md").read_text()
+    path = Path("EXPERIMENTS.md")
+    md = path.read_text() if path.exists() else STUB
+    if MARK not in md:
+        md = md.rstrip() + "\n\n" + MARK + "\n"
     block = (MARK + "\n\n" + summary() + "\n### Single-pod (16×16)\n\n"
              + table("single") + "\n### Multi-pod (2×16×16)\n\n"
-             + table("multi"))
+             + table("multi") + "\n" + bench_section())
     pre = md.split(MARK)[0]
     post = md.split(MARK)[-1]
     # keep everything after the old marker section's next heading
     tail_idx = post.find("\n## §Perf")
     tail = post[tail_idx:] if tail_idx >= 0 else ""
-    Path("EXPERIMENTS.md").write_text(pre + block + tail)
+    path.write_text(pre + block + tail)
     print("EXPERIMENTS.md updated")
 
 

@@ -7,7 +7,10 @@ while WCT comparisons across algorithms / N / α reproduce directly.
 """
 from __future__ import annotations
 
+import json
+import platform
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -45,3 +48,50 @@ def row(name: str, seconds: float, derived: str = ""):
 
 def emit_header():
     print("name,us_per_call,derived", flush=True)
+
+
+def bench_record() -> dict:
+    """The accumulated ROWS as a BENCH_*.json-shaped trajectory record."""
+    return {
+        "meta": {
+            "jax": jax.__version__,
+            "devices": len(jax.devices()),
+            "platform": platform.platform(),
+        },
+        "rows": {name: {"us": us, "derived": derived}
+                 for name, us, derived in ROWS},
+    }
+
+
+def write_bench(path: str) -> dict:
+    """Dump the accumulated ROWS as a BENCH_*.json trajectory file."""
+    rec = bench_record()
+    Path(path).write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} ({len(rec['rows'])} rows)", flush=True)
+    return rec
+
+
+def check_regression(bench: dict, baseline_path: str, factor: float = 2.0,
+                     slack_us: float = 500.0) -> list[str]:
+    """Rows slower than ``factor``× baseline (+``slack_us`` absolute slack
+    to keep sub-millisecond rows from tripping on scheduler noise).
+    Baseline rows carrying ``"gate": false`` are trajectory-only (e.g.
+    compile-time-bound rows, which vary too much across runner hardware
+    to gate on absolute values).  Returns human-readable failure lines;
+    empty means the gate is green.
+    """
+    base = json.loads(Path(baseline_path).read_text())
+    fails = []
+    for name, ref in sorted(base["rows"].items()):
+        if not ref.get("gate", True):
+            continue
+        cur = bench["rows"].get(name)
+        if cur is None:
+            fails.append(f"missing row vs baseline: {name}")
+            continue
+        limit = factor * ref["us"] + slack_us
+        if cur["us"] > limit:
+            fails.append(
+                f"{name}: {cur['us']:.1f}us > {factor:g}x baseline "
+                f"{ref['us']:.1f}us (+{slack_us:g}us slack)")
+    return fails

@@ -8,6 +8,9 @@ overlap-degree sweep (the path that replaced the bounded-window emit).
 Rows:
   dynamic_d{d}_churn{pct}_batched   — one batched call moving b regions
   dynamic_d{d}_churn{pct}_seq       — b single-region update calls
+  dynamic_dist_d{d}_churn{pct}_p{P} — the same batched tick with the
+                                      query sharded over a P-device mesh
+                                      (backend="distributed")
   twopass_pairs_n{N}_a{alpha}       — exact enumeration, K pairs emitted
 """
 from __future__ import annotations
@@ -23,9 +26,9 @@ CHURN = (0.01, 0.1, 0.5)
 DIMS = (1, 2)
 
 
-def _fresh_service(d: int) -> DDMService:
+def _fresh_service(d: int, spec: MatchSpec | None = None) -> DDMService:
     S, U = paper_workload(seed=7, n_total=N_TOTAL, alpha=5.0, d=d)
-    svc = DDMService(S, U)
+    svc = DDMService(S, U, spec=spec)
     svc.connect()
     return svc
 
@@ -59,6 +62,20 @@ def run():
             t_s = bench(sequential, iters=1)
             row(f"dynamic_d{d}_churn{int(churn * 100)}_seq", t_s,
                 f"b={b} speedup={t_s / t_b:.1f}x")
+
+    # the same batched tick with the per-tick query sharded over the mesh
+    import jax
+
+    ndev = len(jax.devices())
+    dist_spec = MatchSpec(algo="itm", backend="distributed",
+                          capacity="grow")
+    for d in DIMS:
+        svc = _fresh_service(d, spec=dist_spec)
+        b = max(int(0.1 * svc.s_lo.shape[0]), 1)
+        idx, lo, hi = _moves(rng, svc, b, d)
+        t_d = bench(lambda: svc.update_regions("sub", idx, lo, hi),
+                    iters=3)
+        row(f"dynamic_dist_d{d}_churn10_p{ndev}", t_d, f"b={b}")
 
     for n_total, alpha in ((4096, 1.0), (4096, 100.0), (16384, 10.0)):
         S, U = paper_workload(seed=11, n_total=n_total, alpha=alpha)

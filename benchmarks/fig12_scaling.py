@@ -2,12 +2,30 @@
 Fig. 12(b) — WCT vs α at fixed N: SBM is α-independent, ITM is
 output-sensitive (grows with α).  Paper ranges 1e7–1e8 scale to
 1e4–1e6 on this host; the claims are about *shape*, which reproduces.
+Section (c) sweeps the distributed backend over mesh sizes (powers of
+two up to the local device count — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
+real multi-device mesh on CPU): count, the sharded two-pass pair emit,
+and the sharded batched query, each parity-checked against ``xla``.
 """
 from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import paper_workload
 
 from .common import bench, plan_for, row
+
+
+def _mesh_sizes():
+    ndev = len(jax.devices())
+    p, out = 1, []
+    while p <= ndev:
+        out.append(p)
+        p *= 2
+    return out
 
 
 def run():
@@ -38,3 +56,28 @@ def run():
         assert k == p_itm.count(S, U)
         row(f"fig12b/itm_alpha{alpha}", t_itm, f"K={k}")
         row(f"fig12b/sbm_alpha{alpha}", t_sbm, f"K={k}")
+
+    # (c) distributed backend vs mesh size: count + sharded pair emit +
+    # sharded batched query, parity-checked against the local engine
+    from repro.core import itm
+
+    n = 100_000
+    S, U = paper_workload(seed=4, n_total=n, alpha=1.0)
+    ref = plan_for(S, U, "sbm", capacity="exact")
+    k_ref = ref.count(S, U)
+    tree = itm.build_tree(U)
+    q_lo, q_hi = S.lo[:4096], S.hi[:4096]
+    devs = jax.devices()
+    for p in _mesh_sizes():
+        mesh = Mesh(np.array(devs[:p]), ("shards",))
+        plan = plan_for(S, U, "sbm", backend="distributed", mesh=mesh,
+                        capacity="exact")
+        assert plan.count(S, U) == k_ref, p
+        t_cnt = bench(plan.count, S, U, iters=2)
+        t_pairs = bench(plan.pairs, S, U, iters=2)
+        row(f"fig12c/dist_count_p{p}", t_cnt, f"K={k_ref}")
+        row(f"fig12c/dist_pairs_p{p}", t_pairs, f"K={k_ref}")
+        qplan = plan_for(S, U, "itm", backend="distributed", mesh=mesh,
+                         capacity="grow", max_pairs=16)
+        t_q = bench(qplan.query, tree, U, q_lo, q_hi, iters=2)
+        row(f"fig12c/dist_query_p{p}", t_q, f"b={q_lo.shape[0]}")

@@ -49,8 +49,12 @@ def run():
 
 
 def run_smoke():
-    """CI smoke: one tiny sweep, assertions over parity and retraces."""
-    _sweep(512, 2.0, iters=1)
+    """CI smoke: one tiny sweep, assertions over parity and retraces.
+
+    Best-of-3 iterations: single-iteration timings are too noisy for
+    the 2x benchmark-regression gate on shared CI runners.
+    """
+    _sweep(512, 2.0, iters=3)
 
 
 if __name__ == "__main__":

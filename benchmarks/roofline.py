@@ -2,9 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
                                                  [--mesh single] [--md]
+                                                 [--bench BENCH_*.json ...]
 
 Per (arch × shape): the three §Roofline terms in seconds, dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-device peak memory.
+``--bench`` instead formats one or more ``BENCH_*.json`` trajectory
+records (the files ``benchmarks.run --out`` writes and CI uploads) as a
+markdown table — the perf-trajectory view over engine timings.
 """
 from __future__ import annotations
 
@@ -32,13 +36,33 @@ def fmt(x, w=9):
     return f"{x:{w}.2e}"
 
 
+def bench_table(paths) -> str:
+    """Markdown table over BENCH_*.json trajectory records."""
+    lines = ["| file | row | us/call | derived |",
+             "|---|---|---|---|"]
+    for p in paths:
+        rec = json.loads(Path(p).read_text())
+        meta = rec.get("meta", {})
+        tag = f"{Path(p).name} (devices={meta.get('devices', '?')})"
+        for name, r in sorted(rec.get("rows", {}).items()):
+            lines.append(
+                f"| {tag} | {name} | {r['us']:.1f} | {r['derived']} |")
+    return "\n".join(lines) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi"])
     ap.add_argument("--md", action="store_true", help="markdown table")
+    ap.add_argument("--bench", nargs="+", default=None,
+                    metavar="BENCH_smoke.json",
+                    help="format benchmark trajectory records instead")
     args = ap.parse_args()
+    if args.bench:
+        print(bench_table(args.bench), end="")
+        return
     recs = load(args.dir, args.mesh)
 
     sep = " | " if args.md else "  "

@@ -5,9 +5,14 @@ prints ``name,us_per_call,derived`` CSV (fig13 rows carry bytes — see
 the unit tag in `derived`).
 
 ``--smoke`` is the CI mode: compile a MatchPlan and run one tiny sweep
-per backend available on CPU (``xla`` and interpret-mode ``pallas``),
-assert cross-backend parity, and time the plan-reuse pattern — minutes,
-not hours, so it runs on every PR.
+per backend available on CPU (``xla``, interpret-mode ``pallas``, and
+``distributed`` over the local devices), assert cross-backend parity,
+and time the plan-reuse pattern — minutes, not hours, so it runs on
+every PR.  ``--out BENCH_smoke.json`` records the rows as a JSON
+trajectory file (uploaded as a CI artifact) and ``--baseline
+benchmarks/baseline_smoke.json`` turns the run into a regression gate:
+the process exits non-zero if any row is more than 2× slower than the
+committed baseline.
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import importlib
 import sys
 import time
 
-from .common import bench, emit_header, row
+from .common import (bench, bench_record, check_regression, emit_header,
+                     row, write_bench)
 
 MODULES = [
     "benchmarks.fig9_speedup",
@@ -38,8 +44,10 @@ def smoke() -> None:
 
     S, U = paper_workload(seed=5, n_total=SMOKE_N, alpha=5.0)
     want = None
-    for backend in ("xla", "pallas"):
-        for algo in SMOKE_ALGOS:
+    for backend in ("xla", "pallas", "distributed"):
+        # distributed implements the parallel-SBM family only
+        algos = SMOKE_ALGOS if backend != "distributed" else ("sbm",)
+        for algo in algos:
             spec = MatchSpec(algo=algo, backend=backend, capacity="grow",
                              interpret=(backend == "pallas"))
             plan = build_plan(spec, S.n, U.n, S.d)
@@ -67,6 +75,11 @@ def main() -> None:
                     help="substring filter, e.g. fig12")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny per-backend sweep + parity checks")
+    ap.add_argument("--out", default=None, metavar="BENCH_smoke.json",
+                    help="write the timing rows as a JSON trajectory file")
+    ap.add_argument("--baseline", default=None,
+                    metavar="benchmarks/baseline_smoke.json",
+                    help="fail (exit 1) if any row regresses >2x vs this")
     args = ap.parse_args()
     emit_header()
     t0 = time.time()
@@ -80,6 +93,14 @@ def main() -> None:
             print(f"# {name}", flush=True)
             mod.run()
     print(f"# total_wall_s,{time.time() - t0:.1f},", flush=True)
+    rec = write_bench(args.out) if args.out else None
+    if args.baseline:
+        fails = check_regression(rec or bench_record(), args.baseline)
+        for line in fails:
+            print(f"# REGRESSION {line}", flush=True)
+        if fails:
+            sys.exit(1)
+        print("# bench_regression_gate_ok", flush=True)
 
 
 if __name__ == '__main__':

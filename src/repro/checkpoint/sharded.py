@@ -27,7 +27,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from ..core import Regions, match_pairs
+from ..core import MatchSpec, Regions, build_plan
 
 
 def _leaf_paths(tree):
@@ -139,7 +139,9 @@ def _reshard_plan(old_ranges, new_ranges):
                 np.asarray([[old_ranges[i][1]] for i in old_ids],
                            np.float32))
     cap = (len(new_ids) + len(old_ids)) * 2 + 8
-    pairs, count = match_pairs(S, U, max_pairs=cap, algo="sbm")
+    match_plan = build_plan(MatchSpec(algo="sbm", capacity="fixed",
+                                      max_pairs=cap), S.n, U.n, 1)
+    pairs, count = match_plan.pairs(S, U)
     pairs = np.asarray(pairs)
     pairs = pairs[pairs[:, 0] >= 0]
     plan: dict[int, list[int]] = {}

@@ -20,7 +20,10 @@ per problem shape, and a plan's executables are jit-cached so repeated
 calls never retrace (``plan.traces`` proves it).  Pair enumeration is
 the exact two-pass count-then-emit path — per-emitter counts,
 exclusive-scan offsets, parallel emit; under ``backend="pallas"`` the
-emit is one fused Mosaic kernel (``kernels.emit``).
+emit is one fused Mosaic kernel (``kernels.emit``), and under
+``backend="distributed"`` both the emit and the batched dynamic-service
+query are sharded over a device mesh (``core.distributed``) with
+set-identical results to the local backends.
 
 Public surface:
     MatchSpec / MatchPlan / build_plan (repro.core.engine)

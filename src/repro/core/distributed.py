@@ -23,6 +23,28 @@ Here that becomes, under ``shard_map`` over a 1-D device axis:
 
 The same decomposition lowers at any mesh size — the multi-pod dry-run
 compiles it across 512 devices.
+
+Beyond counting, this module shards the engine's other two execution
+paths (reached via ``MatchSpec(backend="distributed")``):
+
+* **Pair enumeration** (``_dist_pairs``) distributes the exact two-pass
+  count-then-emit: the n+m *emitters* (class A: one per subscription;
+  class B: one per update — see ``sbm._twopass_phase1``) are split into
+  per-device contiguous chunks.  Each device computes its emitters'
+  exact counts with searchsorted against the replicated lo-sorted
+  streams, a local inclusive scan plus one ``all_gather`` of per-device
+  totals yields the *global* exclusive slot offsets, and every device
+  then emits its pairs fully in parallel into its slot range of a
+  globally indexed pair buffer (disjoint scatter + ``psum`` — the
+  Gather).  d > 1 is handled the same way as the local path, by
+  sweeping dimension 0 and filtering full d-dimensional overlap at emit
+  time (invalid slots stay holes; the engine recompacts).
+
+* **Batched dynamic-service queries** (``_dist_query_counts`` /
+  ``_dist_query``) shard the query batch over the mesh while the
+  interval tree and opposite-kind coordinates stay replicated — the
+  queries are embarrassingly parallel (paper Alg. 5 line 10), so a
+  device simply runs the vmapped verified tree walk on its row chunk.
 """
 from __future__ import annotations
 
@@ -33,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import itm
 from .regions import Regions
 
 # ``jax.shard_map`` is the new-JAX spelling; older versions ship it under
@@ -43,6 +66,13 @@ if _shard_map is None:  # pragma: no cover - exercised only on old JAX
 
 Array = jax.Array
 AXIS = "shards"
+
+
+def resolve_mesh(mesh: Mesh | None) -> Mesh:
+    """The spec's mesh, or a 1-D mesh over all local devices."""
+    if mesh is None:
+        return Mesh(np.array(jax.devices()), (AXIS,))
+    return mesh
 
 
 def _endpoints_flat(S: Regions, U: Regions):
@@ -160,8 +190,7 @@ def _distributed_count(S: Regions, U: Regions, mesh: Mesh | None = None,
     (raise ``overprovision`` — cf. sample-sort splitter quality).
     """
     assert S.d == 1
-    if mesh is None:
-        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    mesh = resolve_mesh(mesh)
     nshards = int(np.prod(mesh.devices.shape))
     v, is_lo, is_upd = _endpoints_flat(S, U)
     tot = v.shape[0]
@@ -188,3 +217,177 @@ def _distributed_count(S: Regions, U: Regions, mesh: Mesh | None = None,
         raise OverflowError(
             "distributed SBM bucket overflow; raise overprovision")
     return int(np.sum(np.asarray(parts), dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Distributed two-pass pair enumeration — sharded count-then-emit
+# ---------------------------------------------------------------------------
+
+def _pairs_body(emit_lo, emit_hi, u_lo_sorted, s_lo_sorted, perm_s, perm_u,
+                S_lo, S_hi, U_lo, U_hi, *, cap: int, nshards: int):
+    """Per-device emit body: this device's emitter chunk → its slot range.
+
+    ``emit_lo``/``emit_hi`` are the local chunk of the n+m emitter
+    intervals (dim 0); everything else is replicated.  Returns the
+    globally indexed pair buffer (psum-combined; slot values are the
+    pair indices + 1, 0 meaning "empty"), the per-emitter exact counts
+    (sharded — the host sums them in int64 for the exact K, exactly as
+    the local path does), and the per-device verified-pair total.
+
+    Slot offsets saturate at ``cap`` (the same convention as the local
+    ``_twopass_phase1`` scan), so slot arithmetic stays in int32 even
+    when the true K exceeds the buffer — truncation never corrupts the
+    emitted prefix.  Note the emit loop scans the full global ``cap``
+    per device (O(P·K) work and an O(cap) psum): correct at any mesh
+    size, but the emit stage itself does not get faster with P — see
+    the ROADMAP follow-up on per-device slot-bound emission.
+    """
+    me = jax.lax.axis_index(AXIS)
+    n, m = S_lo.shape[0], U_lo.shape[0]
+    chunk = emit_lo.shape[0]
+    gid = me * chunk + jnp.arange(chunk, dtype=jnp.int32)
+    alive = gid < (n + m)          # padding emitters contribute nothing
+    is_b = gid >= n                # class B: one emitter per update
+
+    # per-device exact counts (pass 1): both classes are searchsorted
+    # ranges over the replicated lo-sorted streams (sbm._twopass_phase1)
+    aA = jnp.searchsorted(u_lo_sorted, emit_lo, side="left")
+    rA = jnp.searchsorted(u_lo_sorted, emit_hi, side="left")
+    bB = jnp.searchsorted(s_lo_sorted, emit_lo, side="right")
+    cB = jnp.searchsorted(s_lo_sorted, emit_hi, side="left")
+    start = jnp.where(is_b, bB, aA).astype(jnp.int32)
+    end = jnp.where(is_b, cB, rA).astype(jnp.int32)
+    cnt = jnp.where(alive, jnp.maximum(end - start, 0), 0)
+
+    # local saturating scan + one all_gather = global exclusive offsets
+    # (saturation keeps every offset ≤ cap, so int32 never wraps)
+    lim = jnp.int32(cap)
+    sat = lambda a, b: jnp.minimum(a + b, lim)            # noqa: E731
+    incl = jax.lax.associative_scan(sat, cnt)
+    total = incl[-1]
+    loffs = jnp.concatenate([jnp.zeros((1,), jnp.int32), incl])
+    all_tot = jax.lax.all_gather(total[None], AXIS).reshape(-1)
+    cums = jax.lax.associative_scan(sat, all_tot)
+    excl = jnp.concatenate([jnp.zeros((1,), jnp.int32), cums[:-1]])
+    carry = excl[me]
+
+    # fully parallel per-device emit into global slots [carry, carry+T)
+    j = jnp.arange(cap, dtype=jnp.int32)
+    e = jnp.clip(jnp.searchsorted(loffs, j, side="right").astype(jnp.int32)
+                 - 1, 0, chunk - 1)
+    rank = j - loffs[e]
+    kidx = start[e] + rank
+    eb = is_b[e]
+    s_idx = jnp.where(eb, perm_s[jnp.clip(kidx, 0, n - 1)],
+                      jnp.clip(gid[e], 0, n - 1))
+    u_idx = jnp.where(eb, jnp.clip(gid[e] - n, 0, m - 1),
+                      perm_u[jnp.clip(kidx, 0, m - 1)])
+    in_stream = j < total
+    # emit-time d-dim filter on dims 1..d-1 (vacuously true at d == 1)
+    ok_d = jnp.all(jnp.logical_and(S_lo[s_idx, 1:] < U_hi[u_idx, 1:],
+                                   U_lo[u_idx, 1:] < S_hi[s_idx, 1:]),
+                   axis=-1)
+    ver = jnp.sum(in_stream & ok_d, dtype=jnp.int32)
+    g = carry + j
+    put = in_stream & ok_d & (g < cap)
+    slot = jnp.where(put, g, cap)              # OOB => dropped
+    buf = jnp.zeros((cap, 2), jnp.int32).at[slot].set(
+        jnp.stack([s_idx, u_idx], axis=1) + 1, mode="drop")
+    buf = jax.lax.psum(buf, AXIS)              # slot ranges are disjoint
+    return buf, cnt, ver[None]
+
+
+def _dist_pairs(S_lo, S_hi, U_lo, U_hi, *, cap: int, nshards: int,
+                mesh: Mesh):
+    """Sharded exact two-pass pair enumeration (jit via the caller).
+
+    Returns ``(pairs, counts, ver_totals)``: ``pairs`` is the (cap, 2)
+    −1-padded global buffer (dim-0 emission order; for d > 1 slots
+    whose pair fails the full overlap check are −1 holes), ``counts``
+    the per-emitter exact dim-0 counts (n+m padded, int32 — the host
+    sums them in int64 for the exact K, which may exceed both the
+    buffer and int32), and ``ver_totals`` the (nshards,) per-device
+    verified-pair partials.
+    """
+    n, m = S_lo.shape[0], U_lo.shape[0]
+    s_lo0, u_lo0 = S_lo[:, 0], U_lo[:, 0]
+    perm_s = jnp.argsort(s_lo0).astype(jnp.int32)
+    perm_u = jnp.argsort(u_lo0).astype(jnp.int32)
+    s_sorted = s_lo0[perm_s]
+    u_sorted = u_lo0[perm_u]
+    emit_lo = jnp.concatenate([s_lo0, u_lo0])
+    emit_hi = jnp.concatenate([S_hi[:, 0], U_hi[:, 0]])
+    pad = (-(n + m)) % nshards
+    if pad:
+        emit_lo = jnp.pad(emit_lo, (0, pad))
+        emit_hi = jnp.pad(emit_hi, (0, pad))
+    f = _shard_map(
+        partial(_pairs_body, cap=cap, nshards=nshards),
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(), P(), P(), P(),
+                  P(), P(), P(), P()),
+        out_specs=(P(), P(AXIS), P(AXIS)),
+    )
+    buf, counts, ver_tot = f(emit_lo, emit_hi, u_sorted, s_sorted,
+                             perm_s, perm_u, S_lo, S_hi, U_lo, U_hi)
+    pairs = jnp.where(buf[:, :1] > 0, buf - 1, -1)
+    return pairs, counts, ver_tot
+
+
+# ---------------------------------------------------------------------------
+# Distributed batched dynamic-service queries — tree replicated, queries
+# sharded (embarrassingly parallel, paper Alg. 5 line 10)
+# ---------------------------------------------------------------------------
+
+def _shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """shard_map without the replication checker: the vmapped tree walks
+    are ``while_loop``s, for which check_rep has no rule (outputs here
+    are all row-sharded, so nothing is lost).  Newer JAX drops the
+    kwarg — fall back to the plain call there."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - future-JAX spelling
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+
+
+def _query_counts_body(tree, q_lo0, q_hi0):
+    return itm.itm_query_counts(tree, q_lo0, q_hi0)
+
+
+def _dist_query_counts(tree, q_lo0, q_hi0, *, nshards: int, mesh: Mesh):
+    """Per-query dim-0 candidate counts, query rows sharded over the mesh.
+
+    The host reduces the gathered counts to the global max — that single
+    reduction is what sizes the shared query capacity under ``grow``.
+    """
+    b = q_lo0.shape[0]
+    pad = (-b) % nshards
+    if pad:
+        # impossible boxes: pruned at the root, zero candidates
+        q_lo0 = jnp.pad(q_lo0, (0, pad), constant_values=jnp.inf)
+        q_hi0 = jnp.pad(q_hi0, (0, pad), constant_values=-jnp.inf)
+    f = _shard_map_norep(_query_counts_body, mesh=mesh,
+                         in_specs=(P(), P(AXIS), P(AXIS)),
+                         out_specs=P(AXIS))
+    return f(tree, q_lo0, q_hi0)[:b]
+
+
+def _query_body(tree, o_lo, o_hi, q_lo, q_hi, *, cap: int):
+    return itm.itm_query_pairs_dd(tree, o_lo, o_hi, q_lo, q_hi, cap=cap)
+
+
+def _dist_query(tree, o_lo, o_hi, q_lo, q_hi, *, cap: int, nshards: int,
+                mesh: Mesh):
+    """Sharded verified d-dim batched query (engine ``plan.query`` path)."""
+    b = q_lo.shape[0]
+    pad = (-b) % nshards
+    if pad:
+        q_lo = jnp.pad(q_lo, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        q_hi = jnp.pad(q_hi, ((0, pad), (0, 0)), constant_values=-jnp.inf)
+    f = _shard_map_norep(partial(_query_body, cap=cap), mesh=mesh,
+                         in_specs=(P(), P(), P(), P(AXIS), P(AXIS)),
+                         out_specs=(P(AXIS), P(AXIS)))
+    ids, cnt = f(tree, o_lo, o_hi, q_lo, q_hi)
+    return ids[:b], cnt[:b]

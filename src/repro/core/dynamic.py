@@ -21,7 +21,13 @@ Array adaptation, three deviations from the pointer version:
   single device round-trip per tick instead of two per region.  Moves of one
   kind never touch the tree being queried (pairs are sub×upd, and the
   opposite kind's tree is the one walked), so a batch is exactly
-  equivalent to a sequence of single updates.
+  equivalent to a sequence of single updates.  Because the whole tick is
+  one ``plan.query``, passing ``spec=MatchSpec(algo="itm",
+  backend="distributed", capacity="grow")`` shards the query batch over
+  the mesh (tree replicated, queries embarrassingly parallel — paper §4's
+  decomposition applied to §3's operation) with no service-code changes;
+  the ``grow`` capacity is sized by a global max-count reduction so every
+  device compiles one static shape.
 * Structural delete+reinsert on a pointer AVL becomes *deferred rebuild*:
   the changed set's tree is marked stale and rebuilt (sort + gather,
   O(n lg n), jitted) only when the next query against it arrives,
@@ -53,7 +59,9 @@ class DDMService:
     floors the per-query id-buffer capacity (rounded up to a power of
     two by the grow policy), so steady-state churn reuses one compiled
     query kernel instead of recompiling whenever the max per-query count
-    drifts.
+    drifts.  A ``spec`` with ``backend="distributed"`` runs every tick's
+    batched query sharded over the mesh (``spec.mesh``, defaulting to
+    all local devices); results are identical to the local backends.
     """
 
     def __init__(self, S: Regions, U: Regions, cap_hint: int = 64,

@@ -31,9 +31,17 @@ Backends
                  stages without a kernel (sorts, tree walks,
                  verification) run on XLA.  ``interpret=True`` runs the
                  kernel bodies on CPU (tests / CI smoke).
-``distributed``  multi-device parallel SBM counting under ``shard_map``
-                 (paper §4); ``count()`` only — pair buffers are not
-                 sharded yet (ROADMAP).
+``distributed``  multi-device parallel SBM under ``shard_map`` (paper
+                 §4), now the full engine API: ``count()`` (distributed
+                 sample sort + collective prefix), ``pairs()`` (sharded
+                 two-pass emit — per-device exact counts, a global
+                 exclusive offset scan via one ``all_gather``, fully
+                 parallel per-device slot-range emit into a globally
+                 indexed buffer, d-dim overlap filtered at emit time),
+                 and ``query()`` (tree replicated, query batch sharded).
+                 Results are set-identical to ``xla`` at any mesh size;
+                 only ``mask()`` remains local-only (a dense (n, m)
+                 matrix has no sharded consumer).
 
 Capacity policies (static buffer sizing for ``pairs()``/``query()``)
 --------------------------------------------------------------------
@@ -188,10 +196,13 @@ class MatchPlan:
         if S.n == 0 or U.n == 0:
             return 0
         if spec.backend == "distributed":
-            return self._count_distributed(S, U)
-        if spec.algo == "bfm":
+            if self.d == 1:
+                return self._count_distributed(S, U)
+            # d > 1 falls through to the generic match-then-verify
+            # count, whose _pairs_impl dispatches to the sharded emit
+        elif spec.algo == "bfm":
             return self._count_bfm(S, U)
-        if self.d == 1:
+        elif self.d == 1:
             return self._count_1d(S, U)
         # d > 1: counting requires pair identity (match-then-verify);
         # the count is exact regardless of the 1-slot output buffer.
@@ -244,10 +255,8 @@ class MatchPlan:
         spec = self.spec
         if spec.algo not in ("sbm", "sbm_chunked", "sbm_binary"):
             raise ValueError(
-                "distributed backend implements parallel SBM counting; "
+                "distributed backend implements parallel SBM; "
                 f"algo={spec.algo!r} is not supported")
-        if self.d != 1:
-            raise ValueError("distributed backend is 1-D (paper §4)")
         from .distributed import _distributed_count
         return _distributed_count(S, U, mesh=spec.mesh,
                                   overprovision=spec.overprovision)
@@ -261,10 +270,6 @@ class MatchPlan:
         """
         self._check(S, U)
         spec = self.spec
-        if spec.backend == "distributed":
-            raise NotImplementedError(
-                "distributed backend supports count() only (ROADMAP: "
-                "sharded pair buffers)")
         if S.n == 0 or U.n == 0:
             cap = self._resolve_cap(0)
             return jnp.full((cap, 2), -1, jnp.int32), 0
@@ -295,6 +300,8 @@ class MatchPlan:
         """(pairs, exact K) with a caller-resolved output capacity."""
         spec = self.spec
         algo = spec.algo
+        if spec.backend == "distributed":
+            return self._pairs_distributed(S, U, out_cap)
         if algo == "bfm" or algo == "gbm":
             # GBM degenerates to BFM for enumeration (paper: per-cell
             # matching IS brute force; pair identity needs no grid).
@@ -362,6 +369,36 @@ class MatchPlan:
         k = int(np.sum(np.asarray(counts), dtype=np.int64))
         return cand, k
 
+    def _pairs_distributed(self, S: Regions, U: Regions, out_cap: int):
+        """Sharded two-pass emit (paper §4 + the exact count-then-emit).
+
+        d == 1 emits straight into the ``out_cap`` global buffer (slot
+        ranges are contiguous, no holes); d > 1 emits into an
+        exactly-sized dim-0 candidate buffer with the remaining
+        dimensions filtered at emit time, then recompacts the surviving
+        pairs into ``out_cap`` slots.  Both report the exact K.
+        """
+        spec = self.spec
+        if spec.algo not in ("sbm", "sbm_chunked", "sbm_binary"):
+            raise ValueError(
+                "distributed backend implements parallel SBM; "
+                f"algo={spec.algo!r} is not supported")
+        from . import distributed as dist
+        mesh = dist.resolve_mesh(spec.mesh)
+        nshards = int(np.prod(mesh.devices.shape))
+        cap = out_cap if self.d == 1 else self._cand_bound(S, U)
+        f = self._jitted("dist_pairs", dist._dist_pairs,
+                         static_argnames=("cap", "nshards", "mesh"))
+        pairs, counts, ver_tot = f(S.lo, S.hi, U.lo, U.hi, cap=cap,
+                                   nshards=nshards, mesh=mesh)
+        if self.d == 1:
+            k = int(np.sum(np.asarray(counts), dtype=np.int64))
+            return pairs, k
+        k = int(np.sum(np.asarray(ver_tot), dtype=np.int64))
+        fc = self._jitted("dist_compact", compact_pairs,
+                          static_argnames=("max_pairs",))
+        return fc(pairs, max_pairs=out_cap), k
+
     # -- masks --------------------------------------------------------------
     def mask(self, S: Regions, U: Regions) -> Array:
         """(n, m) boolean overlap mask (algorithm-independent)."""
@@ -369,7 +406,8 @@ class MatchPlan:
         spec = self.spec
         if spec.backend == "distributed":
             raise NotImplementedError(
-                "distributed backend supports count() only")
+                "distributed backend supports count/pairs/query; a dense "
+                "(n, m) mask is not sharded — use backend='xla'/'pallas'")
         if S.n == 0 or U.n == 0:
             return jnp.zeros((S.n, U.n), jnp.bool_)
         if spec.backend == "pallas":
@@ -388,31 +426,73 @@ class MatchPlan:
         are (b, d).  Returns ``(ids (b, cap) −1-padded, counts (b,))``
         with ``cap`` resolved by the capacity policy (``grow`` memoizes
         a power-of-two cap so steady-state churn reuses one compiled
-        query kernel — the DDMService path).
+        query kernel — the DDMService path).  Under
+        ``backend="distributed"`` the tree and ``opp`` coordinates are
+        replicated and the query batch is sharded over the mesh; the
+        capacity is sized by a global max-count reduction over the
+        gathered per-query counts, so every device compiles the same
+        static shape.
         """
         b = int(q_lo.shape[0])
         if b == 0 or opp.n == 0:
             z = jnp.full((b, 1), -1, jnp.int32)
             return z, jnp.zeros((b,), jnp.int32)
+        if self.spec.backend == "distributed":
+            return self._query_distributed(tree, opp, q_lo, q_hi)
         fc = self._jitted("itm_counts", itm.itm_query_counts)
         counts0 = fc(tree, q_lo[:, 0], q_hi[:, 0])
-        need = max(int(np.max(np.asarray(counts0), initial=0)), 1)
-        pol = self.spec.capacity
-        if pol == "fixed":
-            cap = max(self.spec.max_pairs, 1)
-        elif pol == "exact":
-            cap = need
-        else:
-            self._query_cap = max(self._query_cap, _pow2(need))
-            cap = self._query_cap
+        cap = self._resolve_query_cap(
+            int(np.max(np.asarray(counts0), initial=0)))
         fq = self._jitted("itm_query_dd", itm.itm_query_pairs_dd,
                           static_argnames=("cap",))
         return fq(tree, opp.lo, opp.hi, q_lo, q_hi, cap=cap)
+
+    def _resolve_query_cap(self, need: int) -> int:
+        """Per-query id-buffer capacity under the plan's policy."""
+        need = max(need, 1)
+        pol = self.spec.capacity
+        if pol == "fixed":
+            return max(self.spec.max_pairs, 1)
+        if pol == "exact":
+            return need
+        self._query_cap = max(self._query_cap, _pow2(need))
+        return self._query_cap
+
+    def _query_distributed(self, tree: itm.ITree, opp: Regions,
+                           q_lo: Array, q_hi: Array):
+        from . import distributed as dist
+        mesh = dist.resolve_mesh(self.spec.mesh)
+        nshards = int(np.prod(mesh.devices.shape))
+        fc = self._jitted("dist_query_counts", dist._dist_query_counts,
+                          static_argnames=("nshards", "mesh"))
+        counts0 = fc(tree, q_lo[:, 0], q_hi[:, 0], nshards=nshards,
+                     mesh=mesh)
+        # global max-count reduction: one shared static capacity
+        cap = self._resolve_query_cap(
+            int(np.max(np.asarray(counts0), initial=0)))
+        fq = self._jitted("dist_query", dist._dist_query,
+                          static_argnames=("cap", "nshards", "mesh"))
+        return fq(tree, opp.lo, opp.hi, q_lo, q_hi, cap=cap,
+                  nshards=nshards, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
 # engine-level device helpers (shared by plans; jitted per plan)
 # ---------------------------------------------------------------------------
+
+def select_rows(rows: Array, keep: Array, cap: int) -> Array:
+    """Rows where ``keep`` holds, −1-padded to ``cap`` (the engine's
+    shared recompaction idiom: nonzero with a static size, then a
+    guarded gather)."""
+    sel = jnp.nonzero(keep, size=cap, fill_value=-1)[0]
+    return jnp.where(sel[:, None] >= 0, rows[jnp.maximum(sel, 0)], -1)
+
+
+def compact_pairs(pairs: Array, max_pairs: int) -> Array:
+    """Drop −1 holes from a pair buffer (e.g. the distributed emit-time
+    d-dim filter), recompact into ``max_pairs`` slots."""
+    return select_rows(pairs, pairs[:, 0] >= 0, max_pairs)
+
 
 def sbm_verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):
     """Filter dim-0 candidate pairs on dimensions 1..d-1, recompact."""
@@ -425,9 +505,7 @@ def sbm_verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):
                         U.lo[ui, 1:] < S.hi[si, 1:]), axis=-1)
     ok = ok & valid
     count = jnp.sum(ok, dtype=jnp.int32)
-    keep = jnp.nonzero(ok, size=max_pairs, fill_value=-1)[0]
-    out = jnp.where(keep[:, None] >= 0, cand[jnp.maximum(keep, 0)], -1)
-    return out, count
+    return select_rows(cand, ok, max_pairs), count
 
 
 def itm_flatten_pairs(T: itm.ITree, q_lo: Array, q_hi: Array, per_q: int,
@@ -437,11 +515,8 @@ def itm_flatten_pairs(T: itm.ITree, q_lo: Array, q_hi: Array, per_q: int,
     nq = ids.shape[0]
     u_idx = jnp.broadcast_to(
         jnp.arange(nq, dtype=jnp.int32)[:, None], ids.shape)
-    flat_ok = (ids >= 0).ravel()
-    sel = jnp.nonzero(flat_ok, size=cap, fill_value=-1)[0]
-    s_sel = jnp.where(sel >= 0, ids.ravel()[jnp.maximum(sel, 0)], -1)
-    u_sel = jnp.where(sel >= 0, u_idx.ravel()[jnp.maximum(sel, 0)], -1)
-    return jnp.stack([s_sel, u_sel], axis=1)
+    rows = jnp.stack([ids.ravel(), u_idx.ravel()], axis=1)
+    return select_rows(rows, (ids >= 0).ravel(), cap)
 
 
 @functools.lru_cache(maxsize=256)
