@@ -72,26 +72,59 @@ def write_bench(path: str) -> dict:
 
 
 def check_regression(bench: dict, baseline_path: str, factor: float = 2.0,
-                     slack_us: float = 500.0) -> list[str]:
+                     slack_us: float = 500.0
+                     ) -> tuple[list[str], list[str]]:
     """Rows slower than ``factor``× baseline (+``slack_us`` absolute slack
     to keep sub-millisecond rows from tripping on scheduler noise).
     Baseline rows carrying ``"gate": false`` are trajectory-only (e.g.
     compile-time-bound rows, which vary too much across runner hardware
-    to gate on absolute values).  Returns human-readable failure lines;
-    empty means the gate is green.
+    to gate on absolute values).  Returns ``(fails, ratios)``: human-
+    readable failure lines (empty means the gate is green) plus one
+    new/old ratio line per gated row, for the full picture on failure.
     """
     base = json.loads(Path(baseline_path).read_text())
-    fails = []
+    fails, ratios = [], []
     for name, ref in sorted(base["rows"].items()):
         if not ref.get("gate", True):
             continue
         cur = bench["rows"].get(name)
         if cur is None:
             fails.append(f"missing row vs baseline: {name}")
+            ratios.append(f"{name}: missing (baseline {ref['us']:.1f}us)")
             continue
         limit = factor * ref["us"] + slack_us
+        ratios.append(f"{name}: {cur['us'] / max(ref['us'], 1e-9):.2f}x "
+                      f"({cur['us']:.1f}us vs {ref['us']:.1f}us)")
         if cur["us"] > limit:
             fails.append(
                 f"{name}: {cur['us']:.1f}us > {factor:g}x baseline "
                 f"{ref['us']:.1f}us (+{slack_us:g}us slack)")
-    return fails
+    return fails, ratios
+
+
+def update_baseline(bench: dict, baseline_path: str,
+                    headroom: float = 1.5) -> None:
+    """Rewrite the committed baseline in place from this run's rows.
+
+    Row values get ``headroom``× slack (the committed-baseline
+    methodology — see the baseline's ``meta.note``); ``gate: false``
+    markers and the note survive from the existing file, so a deliberate
+    slowdown is a one-command refresh instead of hand-editing JSON.
+    """
+    path = Path(baseline_path)
+    old = json.loads(path.read_text()) if path.exists() else {}
+    old_rows = old.get("rows", {})
+    rows = {}
+    for name, cur in bench["rows"].items():
+        entry = {"us": round(cur["us"] * headroom, 1),
+                 "derived": cur["derived"]}
+        if not old_rows.get(name, {}).get("gate", True):
+            entry["gate"] = False
+        rows[name] = entry
+    rec = {"meta": {**bench["meta"],
+                    **({"note": old["meta"]["note"]}
+                       if "note" in old.get("meta", {}) else {})},
+           "rows": rows}
+    path.write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+    print(f"# rewrote baseline {path} ({len(rows)} rows, "
+          f"{headroom:g}x headroom)", flush=True)

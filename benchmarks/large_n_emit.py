@@ -1,0 +1,82 @@
+"""Large-N emit-route sweep: resident vs streaming vs XLA pass 2.
+
+The paper's evaluation centers on the 1e6-region regime; this sweep
+drives the two-pass pair enumeration through every emit route the
+byte-budget policy allows at each size (``kernels.ops.choose_emit_route``:
+resident tables → streamed tables → XLA pass 2), asserts the routes are
+bit-identical, and times them.  On this CPU host the Pallas routes run
+in interpret mode, so their absolute timings are trajectory-only signal;
+the XLA rows and the cross-route parity asserts are the load-bearing
+part, and on a real TPU the same module times the compiled kernels.
+
+Rows:
+  large_n/emit_{route}_n{N} — one ``plan.pairs`` call (us), route pinned
+  derived: exact K, the route the policy would pick, truncation flag
+
+``run_smoke()`` is the CI subset: one size per side of the resident
+threshold (n+m = 1e5 and 6e5 — the latter past the old ~5.2e5 VMEM
+fallback, so CI proves the streaming kernel, not the fallback, runs at
+sizes the resident kernel cannot reach).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MatchSpec, build_plan, paper_workload
+from repro.kernels import ops
+
+from .common import bench, row
+
+ALPHA = 0.5
+CAP = 8192          # fixed capacity: bounds the interpret-mode grid
+BLOCK = MatchSpec().block   # the block the benchmarked plans compile with
+FULL_SIZES = (100_000, 500_000, 1_000_000, 2_000_000)
+SMOKE_SIZES = (100_000, 600_000)
+
+
+def _routes_for(n: int, m: int) -> list[str]:
+    need = ops.emit_route_bytes(n, m, block=BLOCK)
+    budget = ops._EMIT_VMEM_TABLE_BUDGET
+    routes = [r for r in ("resident", "streaming")
+              if need[r] <= budget]
+    return routes + ["xla"]
+
+
+def _sweep(sizes, iters: int = 2) -> None:
+    for n_total in sizes:
+        S, U = paper_workload(seed=41, n_total=n_total, alpha=ALPHA)
+        auto = ops.choose_emit_route(S.n, U.n, block=BLOCK)
+        want_pairs = want_k = None
+        for route in _routes_for(S.n, U.n):
+            spec = MatchSpec(algo="sbm", backend="pallas",
+                             capacity="fixed", max_pairs=CAP,
+                             emit_route=route, interpret=True)
+            plan = build_plan(spec, S.n, U.n, S.d)
+            pairs, k = plan.pairs(S, U)
+            if route != "xla":
+                assert ops.last_emit_route() == route, (route, n_total)
+            if want_pairs is None:
+                want_pairs, want_k = np.asarray(pairs), k
+            else:
+                assert k == want_k, (route, n_total, k, want_k)
+                np.testing.assert_array_equal(np.asarray(pairs),
+                                              want_pairs)
+            t = bench(plan.pairs, S, U, iters=iters)
+            row(f"large_n/emit_{route}_n{n_total}", t,
+                f"K={k};auto_route={auto};truncated={int(k > CAP)}")
+
+
+def run() -> None:
+    _sweep(FULL_SIZES)
+
+
+def run_smoke() -> None:
+    """CI smoke: both sides of the resident threshold, parity-checked."""
+    _sweep(SMOKE_SIZES, iters=2)
+
+
+if __name__ == "__main__":
+    from .common import emit_header
+
+    emit_header()
+    run()

@@ -22,7 +22,7 @@ import sys
 import time
 
 from .common import (bench, bench_record, check_regression, emit_header,
-                     row, write_bench)
+                     row, update_baseline, write_bench)
 
 MODULES = [
     "benchmarks.fig9_speedup",
@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.fig14_koln",
     "benchmarks.ddm_dynamic",
     "benchmarks.plan_reuse",
+    "benchmarks.large_n_emit",
 ]
 
 SMOKE_N = 2048
@@ -63,9 +64,10 @@ def smoke() -> None:
             row(f"smoke/{algo}_{backend}_n{SMOKE_N}", t,
                 f"K={k};retraces=0")
 
-    from . import plan_reuse
+    from . import large_n_emit, plan_reuse
 
     plan_reuse.run_smoke()
+    large_n_emit.run_smoke()
     print("# smoke_parity_ok", flush=True)
 
 
@@ -80,6 +82,12 @@ def main() -> None:
     ap.add_argument("--baseline", default=None,
                     metavar="benchmarks/baseline_smoke.json",
                     help="fail (exit 1) if any row regresses >2x vs this")
+    ap.add_argument("--update-baseline", nargs="?", default=None,
+                    const="benchmarks/baseline_smoke.json",
+                    metavar="benchmarks/baseline_smoke.json",
+                    help="rewrite the committed baseline in place from "
+                         "this run's rows (1.5x headroom; preserves "
+                         "gate:false markers and the meta note)")
     args = ap.parse_args()
     emit_header()
     t0 = time.time()
@@ -94,11 +102,19 @@ def main() -> None:
             mod.run()
     print(f"# total_wall_s,{time.time() - t0:.1f},", flush=True)
     rec = write_bench(args.out) if args.out else None
+    if args.update_baseline:
+        update_baseline(rec or bench_record(), args.update_baseline)
     if args.baseline:
-        fails = check_regression(rec or bench_record(), args.baseline)
+        fails, ratios = check_regression(rec or bench_record(),
+                                         args.baseline)
         for line in fails:
             print(f"# REGRESSION {line}", flush=True)
         if fails:
+            # the full per-row picture, so a deliberate slowdown is a
+            # one-command `--update-baseline` refresh, not JSON surgery
+            print("# per-row new/old ratios vs baseline:", flush=True)
+            for line in ratios:
+                print(f"# RATIO {line}", flush=True)
             sys.exit(1)
         print("# bench_regression_gate_ok", flush=True)
 

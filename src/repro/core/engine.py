@@ -100,6 +100,8 @@ class MatchSpec:
     tu: int = 256
     block: int = 2048              # Pallas sweep/emit block
     interpret: bool = False        # Pallas interpret mode (CPU)
+    emit_route: str = "auto"       # Pallas emit regime (below)
+    emit_budget: int | None = None  # emit VMEM byte budget (None=default)
     overprovision: float = 2.5     # distributed bucket slack
     mesh: Any = None               # jax.sharding.Mesh for distributed
 
@@ -115,6 +117,10 @@ class MatchSpec:
                 f"got {self.capacity}")
         if self.capacity == "fixed" and self.max_pairs is None:
             raise ValueError("capacity='fixed' requires max_pairs")
+        if self.emit_route not in ("auto", "resident", "streaming", "xla"):
+            raise ValueError(
+                "emit_route must be one of ('auto', 'resident', "
+                f"'streaming', 'xla'), got {self.emit_route}")
 
 
 class MatchPlan:
@@ -341,13 +347,34 @@ class MatchPlan:
         pairs, count = f(S, U, max_pairs=out_cap)
         return pairs, int(count)
 
+    def emit_route(self) -> str | None:
+        """The emit regime ``pairs()`` will take on the pallas backend.
+
+        Resolves the spec's ``emit_route`` pin, or applies the byte-budget
+        policy (``kernels.ops.choose_emit_route``) to this plan's problem
+        shape under ``emit_budget``.  ``None`` for non-pallas backends and
+        for algorithms that do not reach the two-pass emit kernel.
+        """
+        spec = self.spec
+        if (spec.backend != "pallas"
+                or spec.algo not in ("sbm", "sbm_chunked", "sbm_binary")):
+            return None
+        if spec.emit_route != "auto":
+            return spec.emit_route
+        from ..kernels import ops
+        return ops.choose_emit_route(self.n_sub, self.n_upd,
+                                     block=spec.block,
+                                     budget=spec.emit_budget)
+
     def _pairs_sbm_dim0(self, S: Regions, U: Regions, cap: int):
         spec = self.spec
         S0, U0 = self._project(S), self._project(U)
         if spec.backend == "pallas":
             from ..kernels import ops
             return ops.twopass_pairs_pallas(S0, U0, cap, block=spec.block,
-                                            interpret=spec.interpret)
+                                            interpret=spec.interpret,
+                                            route=spec.emit_route,
+                                            budget=spec.emit_budget)
         f = self._jitted("twopass_emit", sbm._twopass_emit,
                          static_argnames=("max_pairs",))
         pairs, cnt_a, cnt_b = f(S0.lo[:, 0], S0.hi[:, 0],

@@ -5,30 +5,54 @@ produces per-emitter counts and saturated exclusive-scan output offsets
 on the XLA side (sort + searchsorted are already near-roofline there).
 Pass 2 — the slot→(emitter, rank) lookup and the pair write — was an
 XLA ``searchsorted`` + two gathers with three HBM round-trips between
-them; here it is ONE kernel: the grid walks the output buffer in
-(1, B) blocks, each program binary-searches the offset table held in
-VMEM for its B slots (lg(n+m) steps, all lanes in lock-step), derives
-the emitter-local rank, and writes both pair halves — offsets, counts,
-start table and the two sort permutations are read once into VMEM and
-reused by every program.
+them; here it is ONE kernel, in two size regimes:
 
-Slot semantics match the XLA pass 2 bit-for-bit: slot ``t`` belongs to
-the last emitter ``e`` with ``offs[e] <= t``; its rank is
-``t − offs[e]``; ranks at or beyond the emitter's count (saturated
+``twopass_emit`` (resident)
+    The grid walks the output buffer in (1, B) blocks; offsets, counts,
+    start table and the two sort permutations are read once into VMEM
+    and reused by every program.  Each program binary-searches the
+    offset table for its B slots (lg(n+m) steps, all lanes in
+    lock-step), derives the emitter-local rank, and writes both pair
+    halves.  Runs while all five tables fit the VMEM budget
+    (≈ 4·(n+m) int32 words).
+
+``twopass_emit_streaming`` (tiled, double-buffered DMA)
+    For the paper's N ≥ 1e6 regime the offset/count/start tables no
+    longer fit VMEM.  The XLA side first *compacts* the emitter tables
+    to the emitters with non-zero counts — compacted offsets are
+    strictly increasing below the saturation limit, so the emitters
+    addressed by one B-slot output tile span at most B + 1 consecutive
+    compacted entries.  It then computes each tile's 128-aligned base
+    index into the compacted tables (a searchsorted over the tile's
+    first slot) and hands those bounds to the kernel as a
+    scalar-prefetch argument.  The kernel keeps the packed
+    (offs/counts/starts/emitter-id) table in HBM (``ANY`` memory
+    space) and double-buffers (B + 256)-wide slices of it through a
+    two-slot VMEM scratch with ``make_async_copy``: while tile ``i``
+    binary-searches its window and writes its pairs, the DMA for tile
+    ``i + 1``'s window is already in flight.  Only the two sort
+    permutations stay VMEM-resident — their gather indices
+    (``start + rank``) are data-dependent and non-local, so no per-tile
+    slice of them exists; they are also the smallest quarter of the
+    table bytes, which is what extends the Pallas route's reach ~4×
+    (to n+m ≈ 2e6 under the default 8 MiB budget) before the XLA
+    fallback takes over.
+
+Slot semantics match the XLA pass 2 bit-for-bit in both regimes: slot
+``t`` belongs to the last emitter ``e`` with ``offs[e] <= t``; its rank
+is ``t − offs[e]``; ranks at or beyond the emitter's count (saturated
 region, or ``t`` past the total) emit the −1 pad.  Class-A emitters
 (``e < n``) own subscription ``e`` and read the update id from the
 lo-sorted U permutation; class-B emitters own update ``e − n`` and read
-the subscription id from the lo-sorted S permutation.
+the subscription id from the lo-sorted S permutation.  Compaction in
+the streaming path cannot change any emitted pair: a slot's selected
+emitter is the *last* one at its offset value, which always has a
+non-zero count (zero-count emitters share their offset with a
+successor, so they are never last).
 
 Lane-dim tables are padded to 128 multiples with sentinels (offsets:
-INT32_MAX/2, never ≤ any slot id; counts/starts: 0) so padding can never
-be selected by the search.
-
-VMEM budget: the five tables are ≈ (3·(n+m) + n + m) int32 words held
-resident for the whole grid; the ``kernels.ops`` wrapper routes problems
-past its byte budget to the bit-identical XLA pass 2 (streaming the
-tables through double-buffered DMA is the ROADMAP follow-up for
-n+m ≫ 1e6).
+INT32_MAX/2, never ≤ any slot id; counts/starts: 0; emitter ids: n+m)
+so padding can never produce a valid slot.
 """
 from __future__ import annotations
 
@@ -37,42 +61,73 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _PAD_OFF = (1 << 30)  # > any slot id; padded offsets are never selected
 DEF_BLOCK = 512
+# streaming window: one output tile of B slots addresses <= B + 1
+# consecutive compacted emitters; +128 covers aligning the window base
+# down to a lane multiple, and the total stays a lane multiple itself.
+STREAM_WIN_EXTRA = 256
 
+
+def _empty_pairs():
+    return jnp.zeros((0, 2), jnp.int32)
+
+
+def _block_slots(i, block: int):
+    t = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    return t[0, :]
+
+
+def _search_last_le(offs, t, span: int):
+    """Largest k in [0, span) with offs[k] <= t, per lane of ``t``."""
+    lo = jnp.zeros_like(t)
+    hi = jnp.full_like(t, span - 1)
+    for _ in range(max((span - 1).bit_length(), 1)):
+        mid = (lo + hi + 1) >> 1
+        go_right = jnp.take(offs, mid) <= t
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid - 1)
+    return lo
+
+
+def _pair_halves(e, j, start, cnt, perm_s_ref, perm_u_ref, *, n: int,
+                 m: int):
+    """Both pair halves for emitter ``e`` / rank ``j`` (−1 when invalid).
+
+    ``e`` is the original emitter id (may be the n+m sentinel on padded
+    window entries — those carry ``cnt == 0`` and fall to the pad).
+    """
+    valid = (j >= 0) & (j < cnt)
+    is_a = e < n
+    u_from_a = jnp.take(perm_u_ref[0, :], jnp.clip(start + j, 0, m - 1))
+    s_from_b = jnp.take(perm_s_ref[0, :], jnp.clip(start + j, 0, n - 1))
+    s_idx = jnp.where(valid, jnp.where(is_a, e, s_from_b), -1)
+    u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, e - n), -1)
+    return s_idx, u_idx
+
+
+# ---------------------------------------------------------------------------
+# resident kernel — all five tables in VMEM for the whole grid
+# ---------------------------------------------------------------------------
 
 def _emit_kernel(offs_ref, counts_ref, starts_ref, perm_s_ref, perm_u_ref,
                  s_out_ref, u_out_ref, *, n: int, m: int, block: int):
     i = pl.program_id(0)
     E = n + m
     offs = offs_ref[0, :]
-    counts = counts_ref[0, :]
-    starts = starts_ref[0, :]
-
-    t = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
-    t = t[0, :]
+    t = _block_slots(i, block)
 
     # binary search: largest e in [0, E] with offs[e] <= t  (== the XLA
     # searchsorted(offs, t, side="right") - 1; offs[0] == 0 <= t always)
-    lo = jnp.zeros_like(t)
-    hi = jnp.full_like(t, E)
-    for _ in range(max(E.bit_length(), 1)):
-        mid = (lo + hi + 1) >> 1
-        go_right = jnp.take(offs, mid) <= t
-        lo = jnp.where(go_right, mid, lo)
-        hi = jnp.where(go_right, hi, mid - 1)
-    e = lo
-
+    e = _search_last_le(offs, t, E + 1)
     j = t - jnp.take(offs, e)
     e_c = jnp.minimum(e, E - 1)
-    valid = (e < E) & (j >= 0) & (j < jnp.take(counts, e_c))
-    start = jnp.take(starts, e_c)
-    is_a = e_c < n
-    u_from_a = jnp.take(perm_u_ref[0, :], jnp.clip(start + j, 0, m - 1))
-    s_from_b = jnp.take(perm_s_ref[0, :], jnp.clip(start + j, 0, n - 1))
-    s_idx = jnp.where(valid, jnp.where(is_a, e_c, s_from_b), -1)
-    u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, e_c - n), -1)
+    cnt = jnp.where(e < E, jnp.take(counts_ref[0, :], e_c), 0)
+    start = jnp.take(starts_ref[0, :], e_c)
+    s_idx, u_idx = _pair_halves(e_c, j, start, cnt, perm_s_ref,
+                                perm_u_ref, n=n, m=m)
     s_out_ref[0, :] = s_idx
     u_out_ref[0, :] = u_idx
 
@@ -95,8 +150,12 @@ def twopass_emit(offs, counts, starts, perm_s, perm_u, *, n: int, m: int,
     ``offs`` is the (n+m+1,) saturated exclusive scan from pass 1,
     ``counts``/``starts`` the (n+m,) per-emitter tables, ``perm_s``/
     ``perm_u`` the lo-sort permutations.  Output slot order is identical
-    to the XLA pass 2 in ``core.sbm._twopass_emit``.
+    to the XLA pass 2 in ``core.sbm._twopass_emit``.  ``max_pairs == 0``
+    short-circuits to an empty (0, 2) buffer (a zero-size grid is not a
+    legal ``pallas_call``), matching the engine's empty-set guarantees.
     """
+    if max_pairs == 0:
+        return _empty_pairs()
     bl = min(block, max(128, max_pairs))
     t_pad = (-max_pairs) % bl
     total = max_pairs + t_pad
@@ -119,4 +178,133 @@ def twopass_emit(offs, counts, starts, perm_s, perm_u, *, n: int, m: int,
                    jax.ShapeDtypeStruct((1, total), jnp.int32)),
         interpret=interpret,
     )(offs_p, counts_p, starts_p, perm_s_p, perm_u_p)
+    return jnp.stack([s_out[0, :max_pairs], u_out[0, :max_pairs]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# streaming kernel — tables tiled through a double-buffered VMEM window
+# ---------------------------------------------------------------------------
+
+def _emit_stream_kernel(base_ref, tab_ref, perm_s_ref, perm_u_ref,
+                        s_out_ref, u_out_ref, win_ref, sem_ref, *,
+                        n: int, m: int, block: int, win: int):
+    """One output tile per program; emitter tables stream in by DMA.
+
+    ``base_ref`` (scalar prefetch) holds each tile's 128-aligned base
+    index into the packed compacted table ``tab_ref`` (HBM-resident,
+    rows: offsets / counts / starts / original emitter id).  ``win_ref``
+    is the (2, 8, win) double-buffer scratch; while tile ``i`` computes
+    out of one slot, tile ``i+1``'s window copies into the other.
+    """
+    i = pl.program_id(0)
+    nt = pl.num_programs(0)
+    slot = jax.lax.rem(i, 2)
+    nxt = jax.lax.rem(i + 1, 2)
+
+    def tile_copy(tile, s):
+        return pltpu.make_async_copy(
+            tab_ref.at[:, pl.ds(base_ref[tile], win)],
+            win_ref.at[s], sem_ref.at[s])
+
+    @pl.when(i == 0)
+    def _():
+        tile_copy(0, 0).start()
+
+    @pl.when(i + 1 < nt)
+    def _():
+        tile_copy(i + 1, nxt).start()
+
+    tile_copy(i, slot).wait()
+
+    window = win_ref[slot]            # (8, win) int32
+    offs_w = window[0, :]
+    t = _block_slots(i, block)
+    # the window covers every emitter this tile's slots can select
+    # (compacted offsets are strictly increasing below saturation), so
+    # the local search equals the global one wherever a slot is valid.
+    k = _search_last_le(offs_w, t, win)
+    j = t - jnp.take(offs_w, k)
+    cnt = jnp.take(window[1, :], k)
+    start = jnp.take(window[2, :], k)
+    e = jnp.take(window[3, :], k)
+    s_idx, u_idx = _pair_halves(e, j, start, cnt, perm_s_ref,
+                                perm_u_ref, n=n, m=m)
+    s_out_ref[0, :] = s_idx
+    u_out_ref[0, :] = u_idx
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "max_pairs", "block",
+                                    "interpret"))
+def twopass_emit_streaming(offs, counts, starts, perm_s, perm_u, *,
+                           n: int, m: int, max_pairs: int,
+                           block: int = DEF_BLOCK,
+                           interpret: bool = False):
+    """Streaming pass-2 pair write — bit-identical to ``twopass_emit``.
+
+    XLA-side prep: compact the emitter tables to non-zero counts (so
+    one output tile spans <= block + 1 consecutive entries), pack them
+    into one (8, E_pad) int32 array that stays in HBM, and compute each
+    tile's aligned window base with one vectorized searchsorted.  The
+    kernel then double-buffers (8, block + 256) windows through VMEM.
+    """
+    if max_pairs == 0:
+        return _empty_pairs()
+    E = n + m
+    # lane-multiple tile (the DMA window slice must be 128-aligned)
+    bl = min(-(-block // 128) * 128, max(128, -(-max_pairs // 128) * 128))
+    win = bl + STREAM_WIN_EXTRA
+    t_pad = (-max_pairs) % bl
+    total = max_pairs + t_pad
+    nt = total // bl
+
+    # compact away zero-count emitters; keep the original id for the
+    # class split and the emitted pair half.
+    sel = jnp.nonzero(counts > 0, size=E, fill_value=E)[0].astype(jnp.int32)
+    ok = sel < E
+    selc = jnp.minimum(sel, E - 1)
+    c_offs = jnp.where(ok, offs[selc], _PAD_OFF)
+    c_counts = jnp.where(ok, counts[selc], 0)
+    c_starts = jnp.where(ok, starts[selc], 0)
+    c_eorig = jnp.where(ok, sel, E)
+
+    pad = max((-E) % 128, win - E)
+    if pad:
+        c_offs = jnp.pad(c_offs, (0, pad), constant_values=_PAD_OFF)
+        c_counts = jnp.pad(c_counts, (0, pad))
+        c_starts = jnp.pad(c_starts, (0, pad))
+        c_eorig = jnp.pad(c_eorig, (0, pad), constant_values=E)
+    e_pad = c_offs.shape[0]
+    # 8 sublanes (int32 tile height) so the DMA slice is tile-aligned
+    tab = jnp.zeros((8, e_pad), jnp.int32)
+    tab = tab.at[0].set(c_offs).at[1].set(c_counts)
+    tab = tab.at[2].set(c_starts).at[3].set(c_eorig)
+
+    t0 = jnp.arange(nt, dtype=jnp.int32) * bl
+    k0 = jnp.searchsorted(c_offs, t0, side="right").astype(jnp.int32) - 1
+    base = (jnp.maximum(k0, 0) // 128) * 128
+    base = jnp.minimum(base, e_pad - win)
+
+    perm_s_p = _pad_lanes(perm_s, 0)
+    perm_u_p = _pad_lanes(perm_u, 0)
+
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda i, b: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                  full(perm_s_p), full(perm_u_p)],
+        out_specs=(pl.BlockSpec((1, bl), lambda i, b: (0, i)),
+                   pl.BlockSpec((1, bl), lambda i, b: (0, i))),
+        scratch_shapes=[pltpu.VMEM((2, 8, win), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    s_out, u_out = pl.pallas_call(
+        functools.partial(_emit_stream_kernel, n=n, m=m, block=bl,
+                          win=win),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((1, total), jnp.int32),
+                   jax.ShapeDtypeStruct((1, total), jnp.int32)),
+        interpret=interpret,
+    )(base, tab, perm_s_p, perm_u_p)
     return jnp.stack([s_out[0, :max_pairs], u_out[0, :max_pairs]], axis=1)

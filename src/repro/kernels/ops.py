@@ -98,38 +98,100 @@ def _twopass_tables(s_lo, s_hi, u_lo, u_hi, max_pairs):
     return perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b
 
 
-# the emit kernel keeps all five lookup tables VMEM-resident (shared by
-# every grid step); past this byte budget they cannot fit beside the
-# output block on a real TPU core, so fall back to the XLA pass 2
-# (streaming the tables by DMA is the ROADMAP follow-up)
+# Emit-route policy.  The resident emit kernel keeps all five lookup
+# tables VMEM-resident (shared by every grid step); past the byte budget
+# they cannot fit beside the output block on a real TPU core.  The
+# streaming kernel DMAs the offset/count/start tables per tile and only
+# keeps the two sort permutations resident, reaching ~4x further before
+# the bit-identical XLA pass 2 takes over.  Tests monkeypatch the budget
+# to exercise every route at small sizes.
 _EMIT_VMEM_TABLE_BUDGET = 8 << 20
+EMIT_ROUTES = ("auto", "resident", "streaming", "xla")
+
+# last route taken by twopass_pairs_pallas (None before any call /
+# after an empty-set short-circuit) — lets tests and benchmarks prove
+# which kernel actually ran rather than trusting the policy.
+_LAST_EMIT_ROUTE: str | None = None
+
+
+def last_emit_route() -> str | None:
+    return _LAST_EMIT_ROUTE
+
+
+def emit_route_bytes(n: int, m: int, *, block: int = emit_kernel.DEF_BLOCK
+                     ) -> dict:
+    """VMEM byte math behind the route policy (int32 words x 4).
+
+    ``resident``: offsets (n+m+1) + counts + starts (n+m each) + the two
+    permutations (n + m) all live in VMEM for the whole grid.
+    ``streaming``: only the permutations are resident; the packed
+    emitter table streams through a double-buffered 2 x (8, block+256)
+    window.
+    """
+    e = n + m
+    win = (-(-block // 128) * 128) + emit_kernel.STREAM_WIN_EXTRA
+    return {
+        "resident": 4 * (3 * (e + 1) + e),
+        "streaming": 4 * e + 2 * 8 * win * 4,
+    }
+
+
+def choose_emit_route(n: int, m: int, *,
+                      block: int = emit_kernel.DEF_BLOCK,
+                      budget: int | None = None) -> str:
+    """Smallest-footprint emit route whose VMEM need fits ``budget``.
+
+    Pure and deterministic: ``resident`` while all five tables fit,
+    then ``streaming`` while the permutations alone fit, else ``xla``.
+    ``budget=None`` reads the module default (monkeypatchable).
+    """
+    budget = _EMIT_VMEM_TABLE_BUDGET if budget is None else budget
+    need = emit_route_bytes(n, m, block=block)
+    if need["resident"] <= budget:
+        return "resident"
+    if need["streaming"] <= budget:
+        return "streaming"
+    return "xla"
 
 
 def twopass_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
                          block: int = emit_kernel.DEF_BLOCK,
-                         interpret: bool = False):
+                         interpret: bool = False, route: str = "auto",
+                         budget: int | None = None):
     """Exact 1-D pair enumeration, pass 2 fused into one Pallas kernel.
 
     Pass 1 (sort + searchsorted counts + saturated offset scan) stays on
-    XLA; the slot→(emitter, rank) lookup and the pair write run as the
+    XLA; the slot→(emitter, rank) lookup and the pair write run as a
     ``kernels.emit`` Mosaic kernel.  Same contract as
     ``core.sbm.sbm_pairs``: ``(pairs int32 (max_pairs, 2) −1-padded,
-    exact count)``, truncation reports the true K.  Problem sizes whose
-    lookup tables exceed the per-core VMEM budget (~(3·(n+m) + n + m)
-    int32 words) take the bit-identical XLA pass 2 instead.
+    exact count)``, truncation reports the true K.
+
+    ``route`` picks the emit regime: ``auto`` applies
+    ``choose_emit_route`` (resident tables → streamed tables → the
+    bit-identical XLA pass 2 as sizes grow past ``budget``); pinning
+    ``resident``/``streaming``/``xla`` bypasses the policy — all three
+    produce bit-identical output at any size that compiles, which is
+    what the parity tests pin them for.
     """
+    global _LAST_EMIT_ROUTE
     assert S.d == 1
+    if route not in EMIT_ROUTES:
+        raise ValueError(f"route must be one of {EMIT_ROUTES}, got {route}")
     if S.n == 0 or U.n == 0:
+        _LAST_EMIT_ROUTE = None
         return jnp.full((max_pairs, 2), -1, jnp.int32), 0
-    table_bytes = 4 * (3 * (S.n + U.n + 1) + S.n + U.n)
-    if table_bytes > _EMIT_VMEM_TABLE_BUDGET:
+    if route == "auto":
+        route = choose_emit_route(S.n, U.n, block=block, budget=budget)
+    _LAST_EMIT_ROUTE = route
+    if route == "xla":
         from ..core.sbm import sbm_pairs
         return sbm_pairs(S, U, max_pairs)
     perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_tables(
         S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], max_pairs)
-    pairs = emit_kernel.twopass_emit(
-        offs, counts, starts, perm_s, perm_u, n=S.n, m=U.n,
-        max_pairs=max_pairs, block=block, interpret=interpret)
+    emit = (emit_kernel.twopass_emit if route == "resident"
+            else emit_kernel.twopass_emit_streaming)
+    pairs = emit(offs, counts, starts, perm_s, perm_u, n=S.n, m=U.n,
+                 max_pairs=max_pairs, block=block, interpret=interpret)
     count = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
                 + np.sum(np.asarray(cnt_b), dtype=np.int64))
     return pairs, count

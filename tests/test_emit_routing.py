@@ -1,0 +1,215 @@
+"""Emit-route policy and cross-route parity (resident/streaming/XLA).
+
+The three emit regimes must be bit-identical wherever they run — the
+route is a pure performance decision (``kernels.ops.choose_emit_route``
+byte-budget policy), never a semantic one.  These tests pin each route
+explicitly (so the kernel under test is the one that actually runs —
+``last_emit_route`` proves it), drive the router across both byte
+thresholds, and cross the *real* default thresholds with interpret-mode
+runs at n+m = 6e5 (past the old ~5.2e5 resident/VMEM fallback point)
+and 2e6 (the paper's benchmark regime, upper edge of the streaming
+route).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import MatchSpec, build_plan, make_regions, paper_workload
+from repro.core.sbm import sbm_pairs
+from repro.kernels import ops
+from repro.kernels.emit import DEF_BLOCK
+
+from proputils import interval_cases
+
+
+# ---------------------------------------------------------------------------
+# route policy (pure, no kernels)
+# ---------------------------------------------------------------------------
+
+def test_route_policy_thresholds_exact():
+    """The router flips exactly at its published byte thresholds."""
+    e = 8192
+    n = m = e // 2
+    need = ops.emit_route_bytes(n, m)
+    assert need["resident"] == 4 * (3 * (e + 1) + e)
+    assert need["streaming"] == 4 * e + 2 * 8 * (DEF_BLOCK + 256) * 4
+    # resident/streaming boundary
+    assert ops.choose_emit_route(n, m, budget=need["resident"]) \
+        == "resident"
+    assert ops.choose_emit_route(n, m, budget=need["resident"] - 1) \
+        == "streaming"
+    # streaming/xla boundary
+    assert ops.choose_emit_route(n, m, budget=need["streaming"]) \
+        == "streaming"
+    assert ops.choose_emit_route(n, m, budget=need["streaming"] - 1) \
+        == "xla"
+
+
+def test_route_policy_default_budget_regimes():
+    """Default 8 MiB budget: the sizes the paper regime cares about."""
+    assert ops.choose_emit_route(1024, 1024) == "resident"
+    assert ops.choose_emit_route(250_000, 250_000) == "resident"  # 5e5
+    assert ops.choose_emit_route(300_000, 300_000) == "streaming"  # 6e5
+    assert ops.choose_emit_route(500_000, 500_000) == "streaming"  # 1e6
+    assert ops.choose_emit_route(1_000_000, 1_000_000) == "streaming"
+    assert ops.choose_emit_route(1_100_000, 1_100_000) == "xla"  # 2.2e6
+
+
+def test_route_rejects_unknown():
+    S, U = paper_workload(seed=3, n_total=64, alpha=1.0)
+    with pytest.raises(ValueError, match="route"):
+        ops.twopass_pairs_pallas(S, U, 8, route="vmem", interpret=True)
+    with pytest.raises(ValueError, match="emit_route"):
+        MatchSpec(backend="pallas", emit_route="vmem")
+
+
+# ---------------------------------------------------------------------------
+# pinned-route parity properties
+# ---------------------------------------------------------------------------
+
+def test_pinned_routes_bitexact_property():
+    """resident == streaming == xla, slot for slot, across regimes:
+    dense/sparse overlap, duplicate integer endpoints, saturated caps
+    (cap < K) and all-pad tails (cap >> K)."""
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=5, d=1):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        _, k = sbm_pairs(S, U, 1)
+        for cap in (max(k // 2, 1), k + 257):   # saturated / all-pad tail
+            want_p, want_c = sbm_pairs(S, U, cap)
+            for route in ("resident", "streaming", "xla"):
+                got_p, got_c = ops.twopass_pairs_pallas(
+                    S, U, cap, interpret=True, route=route)
+                assert ops.last_emit_route() == route, (seed, cap)
+                assert got_c == want_c, (seed, cap, route)
+                np.testing.assert_array_equal(
+                    np.asarray(got_p), np.asarray(want_p),
+                    err_msg=f"seed={seed} cap={cap} route={route}")
+
+
+def test_auto_route_follows_budget():
+    """The auto router actually takes the route the policy picks.
+
+    Size chosen so the streaming footprint (permutations + the fixed
+    ~48 KiB double-buffer window) is below the resident footprint —
+    true from n+m ≈ 4e3 up; below that the policy never picks
+    streaming because the window alone outweighs the full tables.
+    """
+    S, U = paper_workload(seed=9, n_total=16_384, alpha=0.5)
+    need = ops.emit_route_bytes(S.n, U.n)
+    assert need["streaming"] < need["resident"]
+    want_p, want_c = sbm_pairs(S, U, 64)
+    for budget, expect in ((need["resident"], "resident"),
+                           (need["resident"] - 1, "streaming"),
+                           (need["streaming"] - 1, "xla")):
+        got_p, got_c = ops.twopass_pairs_pallas(
+            S, U, 64, interpret=True, budget=budget)
+        assert ops.last_emit_route() == expect, budget
+        assert got_c == want_c
+        np.testing.assert_array_equal(np.asarray(got_p),
+                                      np.asarray(want_p))
+
+
+def test_emit_empty_grid_and_empty_sets():
+    """max_pairs == 0 short-circuits to (0, 2) before pallas_call."""
+    S, U = paper_workload(seed=11, n_total=100, alpha=1.0)
+    for route in ("resident", "streaming", "xla"):
+        pairs, count = ops.twopass_pairs_pallas(S, U, 0, interpret=True,
+                                                route=route)
+        assert pairs.shape == (0, 2) and count > 0  # true K still exact
+    empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
+    for route in ("resident", "streaming", "auto"):
+        pairs, count = ops.twopass_pairs_pallas(empty, U, 5,
+                                                interpret=True,
+                                                route=route)
+        assert count == 0 and pairs.shape == (5, 2)
+        assert (np.asarray(pairs) == -1).all()
+        assert ops.last_emit_route() is None
+
+
+# ---------------------------------------------------------------------------
+# engine surface: MatchSpec pins / inspects the route
+# ---------------------------------------------------------------------------
+
+def test_engine_route_pin_and_inspection():
+    S, U = paper_workload(seed=13, n_total=1024, alpha=3.0)
+    want = build_plan(MatchSpec(algo="sbm", capacity="exact"),
+                      S.n, U.n, S.d).pairs(S, U)
+    for route in ("resident", "streaming", "xla"):
+        spec = MatchSpec(algo="sbm", backend="pallas", capacity="exact",
+                         emit_route=route, interpret=True)
+        plan = build_plan(spec, S.n, U.n, S.d)
+        assert plan.emit_route() == route
+        pairs, k = plan.pairs(S, U)
+        assert k == want[1]
+        np.testing.assert_array_equal(np.asarray(pairs),
+                                      np.asarray(want[0]))
+        if route != "xla":
+            assert ops.last_emit_route() == route
+
+    auto = build_plan(MatchSpec(algo="sbm", backend="pallas",
+                                interpret=True), S.n, U.n, S.d)
+    assert auto.emit_route() == "resident"    # 2048 regions fit VMEM
+    tight = build_plan(MatchSpec(algo="sbm", backend="pallas",
+                                 interpret=True, emit_budget=1),
+                       S.n, U.n, S.d)
+    assert tight.emit_route() == "xla"
+    # the knob only exists where the two-pass emit kernel runs
+    assert build_plan(MatchSpec(algo="bfm", backend="pallas"),
+                      S.n, U.n, S.d).emit_route() is None
+    assert build_plan(MatchSpec(algo="sbm"), S.n, U.n,
+                      S.d).emit_route() is None
+
+
+def test_engine_emit_budget_routes_pairs():
+    """A plan's emit_budget drives the actual pairs() route.
+
+    The engine's default block (2048) carries a ~288 KiB double-buffer
+    window, so streaming only wins the policy from n+m ≈ 2.5e4 up.
+    """
+    S, U = paper_workload(seed=17, n_total=65_536, alpha=0.05)
+    need = ops.emit_route_bytes(S.n, U.n, block=2048)  # engine block
+    assert need["streaming"] < need["resident"]
+    spec = MatchSpec(algo="sbm", backend="pallas", capacity="fixed",
+                     max_pairs=256, interpret=True,
+                     emit_budget=need["resident"] - 1)
+    plan = build_plan(spec, S.n, U.n, S.d)
+    assert plan.emit_route() == "streaming"
+    pairs, k = plan.pairs(S, U)
+    assert ops.last_emit_route() == "streaming"
+    want_p, want_c = sbm_pairs(S, U, 256)
+    assert k == want_c
+    np.testing.assert_array_equal(np.asarray(pairs), np.asarray(want_p))
+
+
+# ---------------------------------------------------------------------------
+# the real thresholds, at real sizes (interpret mode, small K caps)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_total,expect", [
+    (500_000, "resident"),    # just under the old ~5.24e5 VMEM ceiling
+    (600_000, "streaming"),   # past it: only the streaming kernel fits
+])
+def test_default_threshold_straddle_runs_pallas(n_total, expect):
+    """Above the old fallback threshold the *streaming kernel* (not the
+    XLA fallback) runs, and is bit-identical to the XLA pass 2."""
+    S, U = paper_workload(seed=29, n_total=n_total, alpha=0.02)
+    assert ops.choose_emit_route(S.n, U.n) == expect
+    cap = 2048
+    want_p, want_c = sbm_pairs(S, U, cap)
+    got_p, got_c = ops.twopass_pairs_pallas(S, U, cap, interpret=True)
+    assert ops.last_emit_route() == expect
+    assert got_c == want_c
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_streaming_bitexact_at_2e6():
+    """The paper's benchmark regime: n+m = 2e6 streams, bit-identically."""
+    S, U = paper_workload(seed=31, n_total=2_000_000, alpha=0.01)
+    assert ops.choose_emit_route(S.n, U.n) == "streaming"
+    cap = 1024
+    want_p, want_c = sbm_pairs(S, U, cap)
+    got_p, got_c = ops.twopass_pairs_pallas(S, U, cap, interpret=True)
+    assert ops.last_emit_route() == "streaming"
+    assert got_c == want_c
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))

@@ -116,10 +116,15 @@ def test_sbm_count_pallas_end_to_end():
 # fused two-pass emit kernel (kernels.emit)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("block", [128, 512])
-def test_twopass_emit_kernel_bitexact_vs_xla(block):
-    """The Pallas pass 2 must reproduce the XLA pass 2 slot-for-slot,
-    including truncation (saturated offsets) and −1 padding."""
+@pytest.mark.parametrize("route,block", [("resident", 128),
+                                         ("resident", 512),
+                                         ("streaming", 128),
+                                         ("streaming", 512)])
+def test_twopass_emit_kernel_bitexact_vs_xla(route, block):
+    """Both Pallas pass-2 regimes must reproduce the XLA pass 2
+    slot-for-slot, including truncation (saturated offsets) and −1
+    padding.  Routes are pinned so the kernel under test is the one
+    that runs (tests/test_emit_routing.py covers the router itself)."""
     rng = np.random.default_rng(71)
     for trial in range(4):
         n, m = int(rng.integers(1, 400)), int(rng.integers(1, 400))
@@ -131,13 +136,15 @@ def test_twopass_emit_kernel_bitexact_vs_xla(block):
         for cap in (1, 9, 4096):
             want_p, want_c = sbm_pairs(S, U, cap)
             got_p, got_c = twopass_pairs_pallas(S, U, cap, block=block,
-                                                interpret=True)
+                                                interpret=True,
+                                                route=route)
             assert got_c == want_c, (trial, cap)
             np.testing.assert_array_equal(np.asarray(got_p),
                                           np.asarray(want_p))
 
 
-def test_twopass_emit_kernel_duplicate_endpoints():
+@pytest.mark.parametrize("route", ["resident", "streaming"])
+def test_twopass_emit_kernel_duplicate_endpoints(route):
     rng = np.random.default_rng(73)
     s_lo = rng.integers(0, 12, (150, 1)).astype(np.float32)
     s_hi = s_lo + rng.integers(1, 5, (150, 1)).astype(np.float32)
@@ -146,7 +153,8 @@ def test_twopass_emit_kernel_duplicate_endpoints():
     S, U = make_regions(s_lo, s_hi), make_regions(u_lo, u_hi)
     mask = oracle_mask(s_lo, s_hi, u_lo, u_hi)
     k = int(mask.sum())
-    pairs, count = twopass_pairs_pallas(S, U, k + 5, interpret=True)
+    pairs, count = twopass_pairs_pallas(S, U, k + 5, interpret=True,
+                                        route=route)
     assert count == k
     arr = np.asarray(pairs)
     arr = arr[arr[:, 0] >= 0]
@@ -155,15 +163,32 @@ def test_twopass_emit_kernel_duplicate_endpoints():
 
 
 def test_twopass_emit_vmem_fallback(monkeypatch):
-    """Past the VMEM table budget the wrapper must route to the
+    """Past both kernel byte budgets the router must take the
     bit-identical XLA pass 2 instead of an uncompilable kernel."""
     import repro.kernels.ops as ops
     S, U = paper_workload(seed=75, n_total=300, alpha=10.0)
     want_p, want_c = sbm_pairs(S, U, 2048)
     monkeypatch.setattr(ops, "_EMIT_VMEM_TABLE_BUDGET", 64)
     got_p, got_c = twopass_pairs_pallas(S, U, 2048, interpret=True)
+    assert ops.last_emit_route() == "xla"
     assert got_c == want_c
     np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_twopass_emit_zero_capacity_short_circuit():
+    """max_pairs == 0 would build a zero-size grid — both kernels must
+    short-circuit to the engine's empty (0, 2) contract instead."""
+    from repro.kernels import emit as emit_k
+    S, U = paper_workload(seed=77, n_total=80, alpha=2.0)
+    for route in ("resident", "streaming"):
+        pairs, count = twopass_pairs_pallas(S, U, 0, interpret=True,
+                                            route=route)
+        assert pairs.shape == (0, 2) and pairs.dtype == jnp.int32
+        assert count > 0          # the exact K survives the 0-cap buffer
+    zeros = jnp.zeros((0,), jnp.int32)
+    out = emit_k.twopass_emit(jnp.zeros((1,), jnp.int32), zeros, zeros,
+                              zeros, zeros, n=0, m=0, max_pairs=0)
+    assert out.shape == (0, 2)
 
 
 def test_twopass_emit_kernel_empty_sets():
