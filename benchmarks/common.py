@@ -81,11 +81,24 @@ def check_regression(bench: dict, baseline_path: str, factor: float = 2.0,
     to gate on absolute values).  Returns ``(fails, ratios)``: human-
     readable failure lines (empty means the gate is green) plus one
     new/old ratio line per gated row, for the full picture on failure.
+
+    Every mismatch between the two row sets fails *by name*: a baseline
+    row the run no longer produces, a run row the baseline has never
+    seen (a new benchmark landed without refreshing the baseline — fix
+    with ``--update-baseline``), and a baseline row without a ``us``
+    value (hand-edited JSON) all get a clear message instead of a
+    ``KeyError`` deep in the gate.
     """
     base = json.loads(Path(baseline_path).read_text())
     fails, ratios = [], []
-    for name, ref in sorted(base["rows"].items()):
+    base_rows = base.get("rows", {})
+    for name, ref in sorted(base_rows.items()):
         if not ref.get("gate", True):
+            continue
+        if "us" not in ref:
+            fails.append(
+                f"malformed baseline row {name!r}: no 'us' value in "
+                f"{baseline_path} — refresh it with --update-baseline")
             continue
         cur = bench["rows"].get(name)
         if cur is None:
@@ -99,6 +112,11 @@ def check_regression(bench: dict, baseline_path: str, factor: float = 2.0,
             fails.append(
                 f"{name}: {cur['us']:.1f}us > {factor:g}x baseline "
                 f"{ref['us']:.1f}us (+{slack_us:g}us slack)")
+    for name in sorted(set(bench["rows"]) - set(base_rows)):
+        fails.append(
+            f"row {name!r} is not in the baseline {baseline_path} — "
+            "a new benchmark landed without refreshing it; run with "
+            "--update-baseline to add it")
     return fails, ratios
 
 

@@ -1,0 +1,44 @@
+"""Static plan & kernel auditor — verification without execution.
+
+``python -m repro.analysis`` runs four passes over the repo (see
+``docs/API.md`` §Static analysis):
+
+1. **jaxpr audit** — every engine matrix row's executables re-traced
+   abstractly at production scale (int32 index width, f64/weak-type
+   promotion, rank promotion, host callbacks).
+2. **kernel audit** — every ``pallas_call`` checked statically (VMEM
+   footprint, index-map bounds, write-write hazards) plus the
+   emit-route byte-model parity assertion.
+3. **retrace guard** — ``no_retrace`` (the enforceable steady-state
+   context manager) and the grow-capacity O(lg K) bound.
+4. **repo AST lint** — deprecated-shim ban and the ``max_pairs == 0``
+   kernel-wrapper contract.
+
+The seeded-defect corpus under ``tests/analysis_corpus/`` keeps the
+auditor honest: every corpus entry must be flagged.
+"""
+from .capture import (CapturedCall, KernelCapture, abstractify,
+                      capture_pallas_calls, capture_plan_executables,
+                      trace_kernel)
+from .corpus import run_corpus
+from .jaxpr_audit import audit_captured_call, audit_closed_jaxpr, audit_fn
+from .kernel_audit import (audit_emit_route_parity, audit_kernel_capture,
+                           derived_table_bytes, vmem_footprint)
+from .lint import lint_paths, lint_source
+from .matrix import (PROBE, TARGETS, audit_kernel_matrix,
+                     audit_plan_matrix, audit_retrace_matrix, run_all)
+from .report import Finding, Report
+from .retrace import (RetraceError, audit_grow_bound, grow_bound,
+                      no_retrace)
+
+__all__ = [
+    "CapturedCall", "KernelCapture", "Finding", "Report",
+    "RetraceError", "PROBE", "TARGETS",
+    "abstractify", "audit_captured_call", "audit_closed_jaxpr",
+    "audit_emit_route_parity", "audit_fn", "audit_grow_bound",
+    "audit_kernel_capture", "audit_kernel_matrix", "audit_plan_matrix",
+    "audit_retrace_matrix", "capture_pallas_calls",
+    "capture_plan_executables", "derived_table_bytes", "grow_bound",
+    "lint_paths", "lint_source", "no_retrace", "run_all", "run_corpus",
+    "trace_kernel", "vmem_footprint",
+]

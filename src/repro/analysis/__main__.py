@@ -1,0 +1,62 @@
+"""CLI: ``python -m repro.analysis [--json PATH] [--corpus DIR]``.
+
+Exit status 0 iff the repo audit has no error findings AND (when a
+corpus directory is given or the default exists) every seeded defect
+was detected.  The JSON report carries both sections — CI uploads it
+as the ``static-analysis`` artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .corpus import corpus_summary, corpus_to_dict, run_corpus
+from .matrix import run_all
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan & kernel auditor (no execution).")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write the full JSON report here")
+    parser.add_argument("--corpus", metavar="DIR", default=None,
+                        help="seeded-defect corpus directory (default: "
+                             "tests/analysis_corpus when present; pass "
+                             "'' to skip)")
+    parser.add_argument("--root", metavar="DIR", default=None,
+                        help="repo root for the AST lint (default: "
+                             "derived from the package location)")
+    args = parser.parse_args(argv)
+
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parents[3]
+
+    report = run_all(root=root)
+    print(report.summary())
+
+    corpus_dir = args.corpus
+    if corpus_dir is None:
+        default = root / "tests" / "analysis_corpus"
+        corpus_dir = str(default) if default.is_dir() else ""
+    results = []
+    if corpus_dir:
+        results = run_corpus(corpus_dir)
+        print(corpus_summary(results))
+
+    if args.json:
+        payload = report.to_dict()
+        payload["corpus"] = corpus_to_dict(results)
+        Path(args.json).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"report written to {args.json}")
+
+    failed = (not report.ok()) or any(not r.ok for r in results) \
+        or (bool(corpus_dir) and not results)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,211 @@
+"""Capture hooks: record what the engine and the kernels actually run.
+
+The auditor never re-implements dispatch.  Instead it *records* the real
+thing at two choke points and re-traces what it recorded abstractly:
+
+* ``capture_plan_executables`` — installs ``core.engine._JIT_CAPTURE_HOOK``
+  so every per-plan jitted executable records ``(plan, name, fn,
+  static_argnames, args, kwargs)`` at call time.  A tiny concrete probe
+  run through the real ``MatchPlan`` methods then yields, for every
+  algo × backend × capacity row, exactly the device functions that row
+  executes — with example arguments whose shapes the audit can
+  re-abstract (and re-scale) for ``jax.make_jaxpr``.
+
+* ``capture_pallas_calls`` — monkeypatches ``pl.pallas_call`` so any
+  trace (e.g. ``jax.eval_shape`` of a kernel wrapper) records the grid,
+  BlockSpecs, scratch shapes, and operand avals the wrapper really
+  passes.  Because the capture happens *during abstract tracing*, the
+  kernels are never executed — a 2e6-region streaming emit is audited
+  in milliseconds with zero device memory.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core import engine
+
+
+# ---------------------------------------------------------------------------
+# engine executables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CapturedCall:
+    """One call into a per-plan jitted executable."""
+
+    plan: Any               # the MatchPlan
+    name: str               # executable name (engine's _jitted key)
+    fn: Callable            # the *unjitted* underlying function
+    static_argnames: tuple  # names passed statically (always by keyword)
+    args: tuple             # concrete positional arguments (pytrees)
+    kwargs: dict            # concrete keyword arguments
+
+    @property
+    def target(self) -> str:
+        s = self.plan.spec
+        return (f"{s.algo}/{s.backend}/{s.capacity}:{self.name}")
+
+    def split_kwargs(self) -> tuple[dict, dict]:
+        """(static_kwargs, traced_kwargs)."""
+        static = {k: v for k, v in self.kwargs.items()
+                  if k in self.static_argnames}
+        traced = {k: v for k, v in self.kwargs.items()
+                  if k not in self.static_argnames}
+        return static, traced
+
+
+@contextlib.contextmanager
+def capture_plan_executables(records: list[CapturedCall]):
+    """Route every newly-built plan executable through a recorder.
+
+    Only plans *constructed inside* the context are captured (existing
+    plans keep their warm caches) — the audit builds fresh ``MatchPlan``
+    instances, bypassing the ``build_plan`` memo, so production plans
+    are never touched.
+    """
+    def hook(plan, name, fn, static_argnames, jitted):
+        def recording(*args, **kw):
+            records.append(CapturedCall(plan, name, fn,
+                                        tuple(static_argnames), args, kw))
+            return jitted(*args, **kw)
+        return recording
+
+    prev = engine._JIT_CAPTURE_HOOK
+    engine._JIT_CAPTURE_HOOK = hook
+    try:
+        yield records
+    finally:
+        engine._JIT_CAPTURE_HOOK = prev
+
+
+def _is_arraylike(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray)) or (
+        hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def abstractify(tree, dim_map: Callable[[int], int] | None = None):
+    """Array leaves → ``ShapeDtypeStruct``; everything else unchanged.
+
+    ``dim_map`` optionally rewrites every dimension size (the audit's
+    probe→target scaling); identity when omitted.
+    """
+    def leaf(x):
+        if _is_arraylike(x):
+            shape = tuple((dim_map(int(d)) if dim_map else int(d))
+                          for d in x.shape)
+            return jax.ShapeDtypeStruct(shape, x.dtype)
+        return x
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call sites
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KernelCapture:
+    """One ``pallas_call`` invocation, normalized across grid-spec styles."""
+
+    kernel_name: str
+    grid: tuple
+    in_specs: tuple          # BlockSpec per (non-scalar-prefetch) operand
+    out_specs: tuple         # BlockSpec per output
+    scratch_shapes: tuple    # MemoryRef-likes
+    num_scalar_prefetch: int
+    operands: tuple          # ShapeDtypeStruct per operand (all of them)
+    out_shapes: tuple        # ShapeDtypeStruct per output
+    interpret: bool = False
+
+    @property
+    def target(self) -> str:
+        return f"pallas_call:{self.kernel_name}"
+
+
+def _as_tuple(x) -> tuple:
+    if x is None:
+        return ()
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)
+
+
+def _normalize(kernel, kw, operands) -> KernelCapture:
+    name = getattr(kernel, "__name__", None)
+    if name is None:  # functools.partial
+        name = getattr(getattr(kernel, "func", None), "__name__", str(kernel))
+    gs = kw.get("grid_spec")
+    if gs is not None:
+        grid = tuple(getattr(gs, "grid", ()) or ())
+        in_specs = _as_tuple(getattr(gs, "in_specs", ()))
+        out_specs = _as_tuple(getattr(gs, "out_specs", ()))
+        scratch = _as_tuple(getattr(gs, "scratch_shapes", ()))
+        nsp = int(getattr(gs, "num_scalar_prefetch", 0) or 0)
+    else:
+        grid = tuple(_as_tuple(kw.get("grid", ())))
+        in_specs = _as_tuple(kw.get("in_specs", ()))
+        out_specs = _as_tuple(kw.get("out_specs", ()))
+        scratch = _as_tuple(kw.get("scratch_shapes", ()))
+        nsp = 0
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct(o.shape, o.dtype)
+        for o in _as_tuple(kw.get("out_shape")))
+    avals = tuple(jax.ShapeDtypeStruct(jnp.shape(o),
+                                       jnp.result_type(o))
+                  for o in operands)
+    return KernelCapture(
+        kernel_name=str(name), grid=grid, in_specs=in_specs,
+        out_specs=out_specs, scratch_shapes=scratch,
+        num_scalar_prefetch=nsp, operands=avals, out_shapes=out_shapes,
+        interpret=bool(kw.get("interpret", False)))
+
+
+@contextlib.contextmanager
+def capture_pallas_calls(records: list[KernelCapture]):
+    """Record every ``pl.pallas_call`` built while the context is live.
+
+    All repo kernels call through the ``pl`` module attribute, so one
+    patch point covers every kernel file.  The wrapped call still
+    builds the real ``pallas_call`` — tracing (``jax.eval_shape`` /
+    ``jax.make_jaxpr``) proceeds normally, it is just observed.
+    """
+    real = pl.pallas_call
+
+    def patched(kernel, **kw):
+        inner = real(kernel, **kw)
+
+        def call(*operands):
+            records.append(_normalize(kernel, kw, operands))
+            return inner(*operands)
+
+        return call
+
+    pl.pallas_call = patched
+    try:
+        yield records
+    finally:
+        pl.pallas_call = real
+
+
+def trace_kernel(fn: Callable, *abstract_args,
+                 **abstract_kwargs) -> list[KernelCapture]:
+    """``jax.eval_shape`` the wrapper, returning its pallas captures.
+
+    ``jax.eval_shape`` memoizes jaxprs, so a repeat trace of the same
+    wrapper at the same shapes would never re-run its Python body — and
+    the patched ``pallas_call`` would record nothing.  The capture only
+    exists while the body actually executes, so flush the trace caches
+    first: an audit trace must always be fresh.
+    """
+    jax.clear_caches()
+    records: list[KernelCapture] = []
+    with capture_pallas_calls(records):
+        jax.eval_shape(fn, *abstract_args, **abstract_kwargs)
+    return records

@@ -1,0 +1,125 @@
+"""Pass 4 — repo AST lint: deprecation bans + kernel-wrapper contracts.
+
+``L_DEPRECATED``
+    ``src/`` and ``benchmarks/`` must not call the deprecation shims
+    (``match_count`` / ``match_pairs`` / ``distributed_sbm_count``) —
+    internal code goes through the ``MatchSpec → build_plan`` engine.
+    The shims' own definition modules are exempt (they *are* the shims);
+    tests are deliberately out of scope (they pin the shims' behavior).
+
+``L_EMPTY_GUARD``
+    Any function that both takes a ``max_pairs`` argument and builds a
+    ``pallas_call`` must short-circuit on ``max_pairs == 0`` before
+    reaching the kernel: a zero-size grid is not a legal ``pallas_call``
+    and the engine's empty-set contract promises a well-formed (0, 2)
+    buffer.  The lint demands a literal ``max_pairs == 0`` comparison
+    (either operand order) somewhere in the function body.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .report import Report
+
+BANNED_CALLS = ("match_count", "match_pairs", "distributed_sbm_count")
+
+# the shims live here; their definitions (and the warnings they emit)
+# are the one allowed appearance.
+DEFINITION_MODULES = ("core/dd_match.py", "core/distributed.py")
+
+DEFAULT_ROOTS = ("src", "benchmarks")
+
+
+def _call_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _is_definition_module(path: Path) -> bool:
+    s = str(path).replace("\\", "/")
+    return any(s.endswith(suffix) for suffix in DEFINITION_MODULES)
+
+
+def _has_max_pairs_arg(fn: ast.FunctionDef) -> bool:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    return "max_pairs" in names
+
+
+def _uses_pallas_call(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _call_name(node) == "pallas_call":
+            return True
+    return False
+
+
+def _has_empty_guard(fn: ast.FunctionDef) -> bool:
+    """A literal ``max_pairs == 0`` compare anywhere in the body."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Compare) or len(node.ops) != 1:
+            continue
+        if not isinstance(node.ops[0], ast.Eq):
+            continue
+        sides = (node.left, node.comparators[0])
+        has_name = any(isinstance(s, ast.Name) and s.id == "max_pairs"
+                       for s in sides)
+        has_zero = any(isinstance(s, ast.Constant) and s.value == 0
+                       for s in sides)
+        if has_name and has_zero:
+            return True
+    return False
+
+
+def lint_source(src: str, *, path: str, report: Report) -> None:
+    """Lint one module's source text (shared by repo scan and corpus)."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        report.add("lint", "L_DEPRECATED", f"{path}:{e.lineno or 0}",
+                   f"unparseable module: {e.msg}")
+        return
+
+    if not _is_definition_module(Path(path)):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in BANNED_CALLS:
+                    report.add(
+                        "lint", "L_DEPRECATED", f"{path}:{node.lineno}",
+                        f"call of deprecated shim '{name}' — build a "
+                        "MatchPlan instead: "
+                        "build_plan(MatchSpec(...), n_sub, n_upd, d)")
+
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if (_has_max_pairs_arg(node) and _uses_pallas_call(node)
+                and not _has_empty_guard(node)):
+            report.add(
+                "lint", "L_EMPTY_GUARD", f"{path}:{node.lineno}",
+                f"'{node.name}' takes max_pairs and builds a "
+                "pallas_call but never short-circuits on "
+                "max_pairs == 0 — a zero-size grid is not a legal "
+                "pallas_call and the engine promises a (0, 2) buffer")
+
+
+def lint_paths(repo_root: str | Path, roots=DEFAULT_ROOTS, *,
+               report: Report) -> int:
+    """Lint every ``.py`` under ``roots``; returns files scanned."""
+    repo_root = Path(repo_root)
+    scanned = 0
+    for root in roots:
+        base = repo_root / root
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(repo_root)
+            lint_source(path.read_text(), path=str(rel), report=report)
+            scanned += 1
+    report.note_audit("lint", f"{scanned} file(s) under {roots}")
+    return scanned

@@ -1,0 +1,119 @@
+"""Findings and the JSON report shared by every auditor pass.
+
+A *finding* is one statically-detected defect: the pass that found it,
+a stable machine-readable code (tests and the seeded-defect corpus key
+on these), the audited target, and a human-readable message.  The
+*report* accumulates findings plus a per-pass log of everything that was
+audited — so "no findings" is distinguishable from "nothing ran".
+
+Codes (stable API — the corpus and CI key on them):
+
+``jaxpr`` pass
+    ``J_INT32_INDEX``     int32 index space wider than INT32_MAX
+    ``J_F64``             float64 value in a traced hot path
+    ``J_WEAK_OUT``        weak-typed output (promotion hazard for callers)
+    ``J_DTYPE_CONTRACT``  output dtype differs from the declared contract
+    ``J_RANK_PROMOTION``  implicit rank promotion inside a jitted path
+    ``J_CALLBACK``        host callback / device transfer inside a jitted
+                          hot path
+
+``kernel`` pass
+    ``K_VMEM_BUDGET``     static VMEM footprint exceeds the core budget
+    ``K_OOB_INDEX_MAP``   a BlockSpec index map leaves the array bounds
+    ``K_WRITE_HAZARD``    two grid steps write the same output tile
+    ``K_ROUTE_DRIFT``     ``emit_route_bytes`` disagrees with the real
+                          BlockSpecs/scratch of the emit kernels
+    ``K_NO_CAPTURE``      a kernel matrix entry traced without any
+                          ``pallas_call`` — the audit lost coverage
+
+``retrace`` pass
+    ``R_GROW_BOUND``      a grow-capacity resolver exceeds the O(lg K)
+                          distinct-trace-shape bound
+    ``R_STEADY_STATE``    a second identical plan call retraced (the
+                          live ``no_retrace`` probe fired)
+
+``lint`` pass
+    ``L_DEPRECATED``      call of a deprecated shim in src/ or benchmarks/
+    ``L_EMPTY_GUARD``     ``pallas_call`` wrapper taking ``max_pairs``
+                          without the ``max_pairs == 0`` short-circuit
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+PASSES = ("jaxpr", "kernel", "retrace", "lint")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_name: str     # one of PASSES
+    code: str          # stable machine-readable defect code (above)
+    target: str        # what was audited (matrix row, kernel, file:line)
+    message: str       # human-readable detail
+    severity: str = "error"   # "error" gates CI; "warning" is advisory
+
+    def __str__(self) -> str:
+        return (f"[{self.pass_name}/{self.code}] {self.target}: "
+                f"{self.message}")
+
+
+class Report:
+    """Accumulated findings + audit coverage, serializable to JSON."""
+
+    def __init__(self) -> None:
+        self.findings: list[Finding] = []
+        self.audited: dict[str, list[str]] = {p: [] for p in PASSES}
+
+    def add(self, pass_name: str, code: str, target: str, message: str,
+            severity: str = "error") -> Finding:
+        f = Finding(pass_name, code, target, message, severity)
+        self.findings.append(f)
+        return f
+
+    def note_audit(self, pass_name: str, target: str) -> None:
+        self.audited.setdefault(pass_name, []).append(target)
+
+    def errors(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def ok(self) -> bool:
+        return not self.errors()
+
+    def findings_for(self, pass_name: str | None = None,
+                     target_substr: str | None = None) -> list[Finding]:
+        out = self.findings
+        if pass_name is not None:
+            out = [f for f in out if f.pass_name == pass_name]
+        if target_substr is not None:
+            out = [f for f in out if target_substr in f.target]
+        return out
+
+    def codes(self) -> set[str]:
+        return {f.code for f in self.findings}
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok(),
+            "n_findings": len(self.findings),
+            "n_errors": len(self.errors()),
+            "audited": {p: sorted(t) for p, t in self.audited.items()},
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }
+
+    def write_json(self, path: str) -> None:
+        Path(path).write_text(
+            json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n")
+
+    def summary(self) -> str:
+        lines = ["static analysis summary:"]
+        for p in PASSES:
+            n_aud = len(self.audited.get(p, []))
+            n_find = len(self.findings_for(p))
+            lines.append(f"  {p:8s} audited {n_aud:4d} target(s), "
+                         f"{n_find} finding(s)")
+        for f in self.findings:
+            lines.append(f"  {f}")
+        lines.append("RESULT: " + ("OK" if self.ok() else "FINDINGS"))
+        return "\n".join(lines)

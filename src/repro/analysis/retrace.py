@@ -1,0 +1,123 @@
+"""Pass 3 — retrace discipline: an enforceable guard + the grow bound.
+
+``no_retrace``
+    The engine's per-plan ``traces`` counter promoted from a number you
+    *can* assert on into a context manager that *enforces* steady-state:
+    any device-side retrace by the guarded plans inside the block raises
+    ``RetraceError`` naming which executables traced (from the plan's
+    ``trace_log``).  Production call sites wrap their steady-state loops;
+    tests wrap a second identical call.
+
+``audit_grow_bound``
+    The ``capacity="grow"`` contract is that a stream of calls with K
+    drifting up to ``max_k`` retraces O(lg K) times total — the
+    power-of-two memoized capacity ladder.  The audit drives a plan's
+    capacity resolver (pure host code — nothing traces) through an
+    adversarial K stream: a dense low ramp, a geometric climb to
+    ``max_k``, and a descending tail that catches resolvers whose
+    capacity is not monotone (oscillating capacities retrace forever).
+    Distinct resolved capacities must stay within
+    ``ceil(lg max_k) + 2``; ``R_GROW_BOUND`` otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+from .report import Report
+
+
+class RetraceError(AssertionError):
+    """A guarded plan retraced inside a ``no_retrace`` block."""
+
+
+@contextlib.contextmanager
+def no_retrace(*plans, allow: int = 0):
+    """Fail loudly if any of ``plans`` retraces inside the block.
+
+    ``allow`` permits that many traces total (e.g. ``allow=1`` for a
+    block expected to compile exactly once).  On violation the error
+    lists, per plan, the executables that traced — the plan's
+    ``trace_log`` delta — so the offending shape or capacity change is
+    immediately attributable.
+    """
+    before = [(p, p.traces, len(p.trace_log)) for p in plans]
+    yield
+    total = sum(p.traces - t0 for p, t0, _ in before)
+    if total > allow:
+        detail = []
+        for p, t0, l0 in before:
+            delta = p.traces - t0
+            if delta:
+                names = ", ".join(p.trace_log[l0:]) or "<unnamed>"
+                detail.append(f"{p!r} traced {delta}x ({names})")
+        raise RetraceError(
+            f"{total} retrace(s) inside a no_retrace block "
+            f"(allowed {allow}): " + "; ".join(detail))
+
+
+def grow_bound(max_k: int) -> int:
+    """Permitted distinct capacities for a grow resolver up to ``max_k``."""
+    return max(1, math.ceil(math.log2(max(max_k, 2)))) + 2
+
+
+def adversarial_k_stream(max_k: int) -> list[int]:
+    """Dense low ramp + linear sweep + geometric climb + descending tail.
+
+    The linear sweep (256 evenly spaced K values) is what separates a
+    doubling ladder (≤ lg K distinct capacities over the whole sweep)
+    from any resolver whose capacity grows linearly in K, however
+    coarsely quantized; the tail re-presents earlier Ks so capacities
+    that are not monotone-memoized surface as extra distinct values.
+    """
+    ks = list(range(1, min(max_k, 257) + 1))
+    step = max(1, max_k // 256)
+    ks.extend(range(step, max_k + 1, step))
+    k = 256
+    while k < max_k:
+        k = min(k * 2 + k // 3, max_k)   # off-power-of-two growth
+        ks.append(k)
+    ks.extend(ks[::-3] or [1])           # descending tail (non-monotone K)
+    return [min(max(k, 1), max_k) for k in ks]
+
+
+def audit_grow_bound(resolver_factory, *, max_k: int, target: str,
+                     report: Report) -> None:
+    """Check one capacity resolver against the O(lg K) retrace bound.
+
+    ``resolver_factory()`` must return a *fresh* stateful resolver
+    ``f(exact_k) -> capacity`` (for the engine:
+    ``MatchPlan(...)._resolve_cap``).  Every distinct returned capacity
+    is one compile of the pairs executable; exceeding ``grow_bound``
+    means steady-state churn keeps recompiling.
+    """
+    resolve = resolver_factory()
+    caps: list[int] = []
+    seen: set[int] = set()
+    for k in adversarial_k_stream(max_k):
+        cap = int(resolve(k))
+        if cap not in seen:
+            seen.add(cap)
+            caps.append(cap)
+    bound = grow_bound(max_k)
+    if len(seen) > bound:
+        head = ", ".join(str(c) for c in caps[:12])
+        more = f", … {len(caps) - 12} more" if len(caps) > 12 else ""
+        report.add(
+            "retrace", "R_GROW_BOUND", target,
+            f"{len(seen)} distinct capacities over a K-stream up to "
+            f"{max_k} (bound: ceil(lg K) + 2 = {bound}); each one is a "
+            f"recompile — capacities: {head}{more}")
+    report.note_audit("retrace", f"{target} (max_k={max_k})")
+
+
+def engine_grow_resolver_factory(spec_kwargs: dict | None = None,
+                                 n: int = 64, m: int = 64):
+    """Fresh ``_resolve_cap`` bound to a new grow-capacity ``MatchPlan``."""
+    from ..core.engine import MatchPlan, MatchSpec
+
+    def factory():
+        spec = MatchSpec(capacity="grow", **(spec_kwargs or {}))
+        return MatchPlan(spec, n, m, 1)._resolve_cap
+
+    return factory

@@ -86,22 +86,25 @@ def block_mask(q_lo: Array, q_hi: Array, kv_lo: Array, kv_hi: Array
                            kv_lo[None, :] < q_hi[:, None])
 
 
-def pairs_to_set(pairs: Array, m: int, n: int | None = None) -> set[int]:
+def pairs_to_set(pairs: Array, m: int, n: int | None = None, *,
+                 context: object = None) -> set[int]:
     """Host-side helper: −1-padded (k, 2) pair buffer → ``{s*m + u}`` set.
 
     Validates every non-pad pair against the region-set sizes: update
     indices must lie in ``[0, m)`` and, when ``n`` is given,
     subscription indices in ``[0, n)`` — out-of-range indices used to
-    alias silently under the ``s*m + u`` encoding.
+    alias silently under the ``s*m + u`` encoding.  On failure the error
+    names the offending slots, their (s, u) values, and the valid
+    ranges; pass ``context=plan`` (anything with a useful ``repr``) to
+    have it appear in the message.
     """
+    from .engine import describe_pair_range_errors
+
     arr = np.asarray(pairs)
-    keep = arr[:, 0] >= 0
-    arr = arr[keep]
-    if arr.size:
-        if int(arr[:, 1].min()) < 0 or int(arr[:, 1].max()) >= m:
-            raise ValueError(
-                f"update index out of range [0, {m}) in pair buffer")
-        if n is not None and int(arr[:, 0].max()) >= n:
-            raise ValueError(
-                f"subscription index out of range [0, {n}) in pair buffer")
+    problems = describe_pair_range_errors(arr, m, n)
+    if problems:
+        ctx = f"; context={context!r}" if context is not None else ""
+        raise ValueError("pair buffer index-range failure: "
+                         + "; ".join(problems) + ctx)
+    arr = arr[arr[:, 0] >= 0]
     return set((arr[:, 0].astype(np.int64) * m + arr[:, 1]).tolist())

@@ -73,6 +73,14 @@ ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
 BACKENDS = ("xla", "pallas", "distributed")
 CAPACITY_POLICIES = ("exact", "fixed", "grow")
 
+# Hook point for the static auditor (repro.analysis): when set, every
+# per-plan jitted executable is routed through the hook at creation time
+# so the auditor can record the underlying function and its concrete
+# call arguments, then re-trace them abstractly with ``jax.make_jaxpr``.
+# ``None`` in production — the hot path pays one global read per
+# *executable creation*, never per call.
+_JIT_CAPTURE_HOOK = None
+
 
 def _pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
@@ -139,6 +147,10 @@ class MatchPlan:
         self.n_upd = int(n_upd)
         self.d = int(d)
         self.traces = 0
+        # one entry per device-side (re)trace, in order: the executable
+        # name that traced.  ``analysis.no_retrace`` reports these when
+        # a steady-state region of code retraces unexpectedly.
+        self.trace_log: list[str] = []
         self._exec: dict[str, Any] = {}
         self._cap: int | None = None        # memoized output capacity
         self._cand_cap: int | None = None   # memoized dim-0 candidate cap
@@ -165,9 +177,13 @@ class MatchPlan:
 
             def counting(*args, **kw):
                 plan.traces += 1
+                plan.trace_log.append(name)
                 return fn(*args, **kw)
 
             cached = jax.jit(counting, static_argnames=static_argnames)
+            if _JIT_CAPTURE_HOOK is not None:
+                cached = _JIT_CAPTURE_HOOK(self, name, fn, static_argnames,
+                                           cached)
             self._exec[name] = cached
         return cached
 
@@ -347,6 +363,27 @@ class MatchPlan:
         pairs, count = f(S, U, max_pairs=out_cap)
         return pairs, int(count)
 
+    def validate_pairs(self, pairs, count: int | None = None) -> None:
+        """Host-side sanity check of a ``pairs()`` result buffer.
+
+        Raises ``ValueError`` naming the offending slots, their (s, u)
+        values, the valid ranges, and this plan's ``repr()`` — the
+        dynamic companion of the static auditor's index checks.  A pad
+        row is all −1; any partially-padded row is also an error.
+        """
+        arr = np.asarray(pairs)
+        problems = describe_pair_range_errors(arr, self.n_upd, self.n_sub)
+        if count is not None:
+            non_pad = int(np.sum(arr[:, 0] >= 0))
+            want = min(count, arr.shape[0])
+            if non_pad != want:
+                problems.append(
+                    f"buffer holds {non_pad} non-pad rows but the "
+                    f"reported count is {count} (capacity {arr.shape[0]})")
+        if problems:
+            raise ValueError("invalid pair buffer: "
+                             + "; ".join(problems) + f"; plan={self!r}")
+
     def emit_route(self) -> str | None:
         """The emit regime ``pairs()`` will take on the pallas backend.
 
@@ -519,6 +556,47 @@ def compact_pairs(pairs: Array, max_pairs: int) -> Array:
     """Drop −1 holes from a pair buffer (e.g. the distributed emit-time
     d-dim filter), recompact into ``max_pairs`` slots."""
     return select_rows(pairs, pairs[:, 0] >= 0, max_pairs)
+
+
+def describe_pair_range_errors(arr: np.ndarray, m: int,
+                               n: int | None = None,
+                               max_report: int = 5) -> list[str]:
+    """Human-readable index-range problems in a −1-padded pair buffer.
+
+    ``arr`` is a host (cap, 2) int array; ``m``/``n`` are the update/
+    subscription set sizes.  Returns one message per problem class,
+    each naming up to ``max_report`` offending slots with their (s, u)
+    values and the valid range — shared by ``MatchPlan.validate_pairs``
+    and ``dd_match.pairs_to_set`` so a range failure is never a bare
+    assertion.
+    """
+    def _offenders(slots):
+        shown = ", ".join(
+            f"slot {int(t)}: (s={int(arr[t, 0])}, u={int(arr[t, 1])})"
+            for t in slots[:max_report])
+        more = f", … {len(slots) - max_report} more" \
+            if len(slots) > max_report else ""
+        return shown + more
+
+    problems: list[str] = []
+    non_pad = arr[:, 0] >= 0
+    bad_u = np.nonzero(non_pad & ((arr[:, 1] < 0) | (arr[:, 1] >= m)))[0]
+    if bad_u.size:
+        problems.append(
+            f"{bad_u.size} update index(es) outside [0, {m}): "
+            + _offenders(bad_u))
+    if n is not None:
+        bad_s = np.nonzero(non_pad & (arr[:, 0] >= n))[0]
+        if bad_s.size:
+            problems.append(
+                f"{bad_s.size} subscription index(es) outside [0, {n}): "
+                + _offenders(bad_s))
+    half_pad = np.nonzero(~non_pad & (arr[:, 1] >= 0))[0]
+    if half_pad.size:
+        problems.append(
+            f"{half_pad.size} half-padded row(s) (s is −1 pad but u is "
+            "not): " + _offenders(half_pad))
+    return problems
 
 
 def sbm_verify_dims(S: Regions, U: Regions, cand: Array, max_pairs: int):

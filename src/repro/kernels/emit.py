@@ -71,6 +71,23 @@ DEF_BLOCK = 512
 STREAM_WIN_EXTRA = 256
 
 
+def lane_pad(x: int, mult: int = 128) -> int:
+    """Round ``x`` up to a lane multiple (the kernels' padded table size)."""
+    return -(-x // mult) * mult
+
+
+def stream_window(block: int) -> int:
+    """Streaming DMA window length (int32 lanes) for an emit ``block``.
+
+    The single source of truth for the window size: the streaming
+    kernel's VMEM scratch is ``(2, 8, stream_window(block))`` and the
+    route policy's byte model (``kernels.ops.emit_route_bytes``) charges
+    exactly these lanes — the static auditor asserts the two never
+    drift apart.
+    """
+    return lane_pad(block) + STREAM_WIN_EXTRA
+
+
 def _empty_pairs():
     return jnp.zeros((0, 2), jnp.int32)
 
@@ -252,8 +269,8 @@ def twopass_emit_streaming(offs, counts, starts, perm_s, perm_u, *,
         return _empty_pairs()
     E = n + m
     # lane-multiple tile (the DMA window slice must be 128-aligned)
-    bl = min(-(-block // 128) * 128, max(128, -(-max_pairs // 128) * 128))
-    win = bl + STREAM_WIN_EXTRA
+    bl = min(lane_pad(block), max(128, lane_pad(max_pairs)))
+    win = stream_window(bl)
     t_pad = (-max_pairs) % bl
     total = max_pairs + t_pad
     nt = total // bl

@@ -86,6 +86,16 @@ def bfm_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
     """
     if S.n == 0 or U.n == 0:
         return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    if S.n * U.n > np.iinfo(np.int32).max:
+        # the mask compaction ravels to flat int32 indices in [0, n*m);
+        # past INT32_MAX they alias silently.  The static auditor
+        # (repro.analysis) flags this bound from the jaxpr; here it is
+        # enforced dynamically with an actionable message.
+        raise ValueError(
+            f"bfm pair enumeration ravels an (n, m) = ({S.n}, {U.n}) "
+            f"mask to flat int32 indices; n*m = {S.n * U.n} exceeds "
+            f"INT32_MAX = {np.iinfo(np.int32).max}. Use the sbm/itm "
+            "two-pass emit path at this scale (MatchSpec(algo='sbm')).")
     mask = bfm_mask_pallas(S, U, ts=ts, tu=tu, interpret=interpret)
     pairs, count = _compact_mask_pairs(mask, max_pairs)
     return pairs, int(count)
@@ -129,7 +139,7 @@ def emit_route_bytes(n: int, m: int, *, block: int = emit_kernel.DEF_BLOCK
     window.
     """
     e = n + m
-    win = (-(-block // 128) * 128) + emit_kernel.STREAM_WIN_EXTRA
+    win = emit_kernel.stream_window(block)
     return {
         "resident": 4 * (3 * (e + 1) + e),
         "streaming": 4 * e + 2 * 8 * win * 4,

@@ -1,0 +1,26 @@
+"""Seeded lint-pass defects — source files under ``lint_defects/`` with
+the banned patterns; the AST lint must flag each.
+"""
+from pathlib import Path
+
+from repro.analysis import lint_source
+
+_DEFECTS = Path(__file__).parent / "lint_defects"
+
+
+def _deprecated_calls(report, target):
+    path = _DEFECTS / "uses_deprecated.py"
+    lint_source(path.read_text(), path=str(path), report=report)
+
+
+def _missing_empty_guard(report, target):
+    path = _DEFECTS / "missing_guard.py"
+    lint_source(path.read_text(), path=str(path), report=report)
+
+
+CASES = [
+    dict(name="deprecated_shim_calls", pass_name="lint",
+         code="L_DEPRECATED", audit=_deprecated_calls),
+    dict(name="pallas_wrapper_missing_empty_guard", pass_name="lint",
+         code="L_EMPTY_GUARD", audit=_missing_empty_guard),
+]

@@ -1,0 +1,33 @@
+"""Seeded retrace-pass defects — capacity resolvers that recompile
+forever.  Each is driven through the adversarial K stream and must blow
+the O(lg K) distinct-capacity bound.
+"""
+from repro.analysis import audit_grow_bound
+
+
+def _exact_resolver(report, target):
+    # "grow" that actually resizes to exactly K: every K drift is a new
+    # static shape, i.e. a recompile per distinct K
+    def factory():
+        return lambda k: max(k, 1)
+
+    audit_grow_bound(factory, max_k=1 << 20, target=target,
+                     report=report)
+
+
+def _quantized_linear_resolver(report, target):
+    # rounding to 1024-slot quanta still grows linearly in K — 1024
+    # distinct capacities by 1e6, vs ~22 for the doubling ladder
+    def factory():
+        return lambda k: -(-max(k, 1) // 1024) * 1024
+
+    audit_grow_bound(factory, max_k=1 << 20, target=target,
+                     report=report)
+
+
+CASES = [
+    dict(name="exact_growth_resolver", pass_name="retrace",
+         code="R_GROW_BOUND", audit=_exact_resolver),
+    dict(name="quantized_linear_resolver", pass_name="retrace",
+         code="R_GROW_BOUND", audit=_quantized_linear_resolver),
+]

@@ -1,0 +1,22 @@
+"""Seeded lint defect: a pallas_call wrapper taking ``max_pairs`` with
+no ``max_pairs == 0`` short-circuit — a zero-size grid is not a legal
+``pallas_call``.  Scanned as text by the corpus lint cases; never
+imported."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def emit_pairs(x, max_pairs: int, block: int = 512):
+    grid = (max_pairs // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, max_pairs), jnp.int32),
+    )(x)

@@ -1,0 +1,14 @@
+"""Seeded lint defect: internal code still calling the deprecated
+shims.  Scanned as text by the corpus lint cases; never imported."""
+from repro.core.dd_match import match_count, match_pairs
+from repro.core.distributed import distributed_sbm_count
+
+
+def count_overlaps(S, U):
+    return match_count(S, U, algo="sbm")
+
+
+def enumerate_overlaps(S, U, cap):
+    pairs, k = match_pairs(S, U, cap, algo="sbm")
+    total = distributed_sbm_count(S, U)
+    return pairs, k, total

@@ -1,0 +1,240 @@
+"""The static auditor itself: passes must flag the corpus, stay clean
+on the repo, and the promoted diagnostics must name what went wrong."""
+import json
+from pathlib import Path
+
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import analysis
+from repro.analysis.corpus import run_corpus
+from repro.analysis.jaxpr_audit import scale_dims
+from repro.analysis.matrix import (audit_kernel_matrix, audit_plan_matrix,
+                                   audit_retrace_matrix)
+from repro.analysis.report import Report
+from repro.core import paper_workload
+from repro.core.dd_match import pairs_to_set
+from repro.core.engine import MatchPlan, MatchSpec, build_plan
+from repro.core.regions import Regions
+from repro.kernels import ops
+
+REPO = Path(__file__).resolve().parents[1]
+CORPUS = REPO / "tests" / "analysis_corpus"
+
+
+# ---------------------------------------------------------------------------
+# the corpus is the auditor's own regression suite
+# ---------------------------------------------------------------------------
+
+def test_corpus_every_seeded_defect_detected():
+    results = run_corpus(CORPUS)
+    assert results, "corpus is empty"
+    missed = [f"{r.module}:{r.name} ({r.error or 'no finding'})"
+              for r in results if not r.ok]
+    assert not missed, f"auditor missed seeded defects: {missed}"
+    # each pass is exercised by at least two seeded defects
+    by_pass = {}
+    for r in results:
+        by_pass.setdefault(r.pass_name, []).append(r)
+    for p in ("jaxpr", "kernel", "retrace", "lint"):
+        assert len(by_pass.get(p, [])) >= 2, p
+
+
+# ---------------------------------------------------------------------------
+# repo must audit clean (cheap slices of the full matrix)
+# ---------------------------------------------------------------------------
+
+def test_kernel_matrix_and_route_parity_clean():
+    report = Report()
+    audit_kernel_matrix(report)
+    assert report.ok(), [str(f) for f in report.errors()]
+    parity = report.audited["kernel"]
+    assert any("emit_route_parity:resident" in t for t in parity)
+    assert any("emit_route_parity:streaming" in t for t in parity)
+
+
+def test_route_parity_detects_model_drift(monkeypatch):
+    drifted = lambda n, m, block=512: {  # noqa: E731
+        "resident": 1, "streaming": 1}
+    monkeypatch.setattr(ops, "emit_route_bytes",
+                        lambda n, m, *, block=512: drifted(n, m, block))
+    report = Report()
+    analysis.audit_emit_route_parity(report, n=2000, m=1500,
+                                     max_pairs=4096)
+    assert {"K_ROUTE_DRIFT"} == report.codes()
+
+
+def test_retrace_matrix_clean():
+    report = Report()
+    audit_retrace_matrix(report)
+    assert report.ok(), [str(f) for f in report.errors()]
+
+
+def test_plan_matrix_row_clean_and_scaled():
+    report = Report()
+    audit_plan_matrix(report, rows=[("sbm", "xla", "grow")])
+    assert report.ok(), [str(f) for f in report.errors()]
+    assert any("sbm/xla/grow" in t for t in report.audited["jaxpr"])
+
+
+def test_lint_repo_sources_clean():
+    report = Report()
+    n = analysis.lint_paths(REPO, report=report)
+    assert n > 10  # src/ + benchmarks/ really were scanned
+    assert report.ok(), [str(f) for f in report.errors()]
+
+
+# ---------------------------------------------------------------------------
+# no_retrace: the counter promoted to an enforceable guard
+# ---------------------------------------------------------------------------
+
+def _small_problem():
+    S, U = paper_workload(seed=5, n_total=256, alpha=1.0)
+    return S, U
+
+
+def test_no_retrace_steady_state_passes():
+    S, U = _small_problem()
+    plan = MatchPlan(MatchSpec(algo="sbm", capacity="grow"), S.n, U.n, 1)
+    plan.count(S, U)
+    plan.pairs(S, U)
+    with analysis.no_retrace(plan):
+        plan.count(S, U)
+        plan.pairs(S, U)
+
+
+def test_no_retrace_raises_with_executable_names():
+    S, U = _small_problem()
+    plan = MatchPlan(MatchSpec(algo="sbm", capacity="grow"), S.n, U.n, 1)
+    with pytest.raises(analysis.RetraceError) as ei:
+        with analysis.no_retrace(plan):
+            plan.count(S, U)
+    msg = str(ei.value)
+    assert "sbm_contribs" in msg        # names the executable that traced
+    assert "MatchPlan" in msg           # and the plan
+
+
+def test_no_retrace_allow_budget():
+    S, U = _small_problem()
+    plan = MatchPlan(MatchSpec(algo="sbm", capacity="grow"), S.n, U.n, 1)
+    with analysis.no_retrace(plan, allow=8):
+        plan.count(S, U)
+        plan.pairs(S, U)
+
+
+def test_grow_bound_engine_within_log_budget():
+    from repro.analysis.retrace import engine_grow_resolver_factory
+    report = Report()
+    analysis.audit_grow_bound(engine_grow_resolver_factory(),
+                              max_k=1 << 16, target="engine",
+                              report=report)
+    assert report.ok()
+
+
+def test_grow_bound_flags_linear_resolver():
+    report = Report()
+    analysis.audit_grow_bound(lambda: (lambda k: max(k, 1)),
+                              max_k=1 << 16, target="linear",
+                              report=report)
+    assert "R_GROW_BOUND" in report.codes()
+
+
+# ---------------------------------------------------------------------------
+# promoted diagnostics: index-range failures name the offenders
+# ---------------------------------------------------------------------------
+
+def test_pairs_to_set_reports_offending_slots():
+    bad = jnp.asarray([[0, 1], [2, 9], [1, -3], [-1, 4], [-1, -1]],
+                      jnp.int32)
+    with pytest.raises(ValueError) as ei:
+        pairs_to_set(bad, m=5, n=3, context="unit-test")
+    msg = str(ei.value)
+    assert "outside [0, 5)" in msg          # update range
+    assert "slot 1" in msg and "u=9" in msg  # names the slot and value
+    assert "half-padded" in msg              # the (-1, 4) row
+    assert "context='unit-test'" in msg
+
+
+def test_validate_pairs_names_plan_and_count_mismatch():
+    plan = build_plan(MatchSpec(algo="sbm", capacity="fixed",
+                                max_pairs=4), 3, 5, 1)
+    good = jnp.asarray([[0, 1], [2, 4], [-1, -1], [-1, -1]], jnp.int32)
+    plan.validate_pairs(good, count=2)      # no raise
+    bad = jnp.asarray([[0, 1], [7, 4], [-1, -1], [-1, -1]], jnp.int32)
+    with pytest.raises(ValueError) as ei:
+        plan.validate_pairs(bad, count=2)
+    msg = str(ei.value)
+    assert "subscription index(es) outside [0, 3)" in msg
+    assert "MatchPlan(algo=sbm" in msg
+    with pytest.raises(ValueError, match="reported count is 3"):
+        plan.validate_pairs(good, count=3)
+
+
+def test_bfm_pairs_refuses_int32_mask_overflow():
+    n = 50_000
+    lo = jnp.zeros((n, 1), jnp.float32)
+    hi = jnp.ones((n, 1), jnp.float32)
+    S = U = Regions(lo, hi)
+    with pytest.raises(ValueError, match="INT32_MAX"):
+        ops.bfm_pairs_pallas(S, U, 8, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# scaling + report plumbing
+# ---------------------------------------------------------------------------
+
+def test_scale_dims_resolves_probe_primes():
+    probe = {"n": 37, "m": 29, "cap": 53}
+    target = {"n": 1000, "m": 700, "cap": 4096}
+    dim_map, unresolved = scale_dims(probe, target)
+    assert dim_map(37) == 1000
+    assert dim_map(29) == 700
+    assert dim_map(66) == 1700        # n+m
+    assert dim_map(67) == 1701        # n+m+1
+    assert dim_map(37 * 29) == 1000 * 700
+    assert dim_map(53) == 4096
+    assert dim_map(1) == 1 and dim_map(2) == 2   # small constants pass
+    assert not unresolved
+    dim_map(97)                       # unknown large dim
+    assert 97 in unresolved
+
+
+def test_report_json_roundtrip(tmp_path):
+    report = Report()
+    report.add("lint", "L_DEPRECATED", "a.py:3", "msg")
+    report.note_audit("lint", "a.py")
+    p = tmp_path / "r.json"
+    report.write_json(str(p))
+    data = json.loads(p.read_text())
+    assert data["ok"] is False
+    assert data["n_errors"] == 1
+    assert data["findings"][0]["code"] == "L_DEPRECATED"
+    assert data["audited"]["lint"] == ["a.py"]
+
+
+def test_capture_hook_restored_after_context():
+    from repro.core import engine
+    before = engine._JIT_CAPTURE_HOOK
+    with analysis.capture_plan_executables([]):
+        assert engine._JIT_CAPTURE_HOOK is not None
+    assert engine._JIT_CAPTURE_HOOK is before
+
+
+def test_trace_kernel_captures_specs_without_execution():
+    from repro.kernels import emit as emit_kernel
+    import functools
+    n = m = 500_000                   # far past anything we'd execute
+    caps = analysis.trace_kernel(
+        functools.partial(emit_kernel.twopass_emit_streaming, n=n, m=m,
+                          max_pairs=1 << 20, block=512),
+        jax.ShapeDtypeStruct((n + m + 1,), jnp.int32),
+        jax.ShapeDtypeStruct((n + m,), jnp.int32),
+        jax.ShapeDtypeStruct((n + m,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.int32))
+    assert len(caps) == 1
+    cap = caps[0]
+    assert cap.num_scalar_prefetch == 1
+    assert cap.grid == ((1 << 20) // 512,)
+    assert analysis.vmem_footprint(cap) > 0

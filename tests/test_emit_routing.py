@@ -183,6 +183,71 @@ def test_engine_emit_budget_routes_pairs():
 
 
 # ---------------------------------------------------------------------------
+# route-policy properties (satellite of the static auditor: the same
+# byte model the kernel parity audit pins is checked as a function here)
+# ---------------------------------------------------------------------------
+
+def _policy_sizes():
+    """(n, m) ladder spanning 1e2..4e6 total, asymmetric splits too."""
+    sizes = []
+    for e in (128, 1000, 4096, 30_000, 250_000, 1_000_000, 4_000_000):
+        sizes.append((e // 2, e - e // 2))
+        sizes.append((e // 4, e - e // 4))
+    return sizes
+
+
+def test_emit_route_bytes_monotone_in_problem_size():
+    """Per route, modeled bytes never decrease as n+m grows — the
+    policy's budget comparison is only sound against a monotone model."""
+    for block in (DEF_BLOCK, 2048):
+        prev = {"resident": -1, "streaming": -1}
+        for n, m in sorted(_policy_sizes(), key=lambda t: t[0] + t[1]):
+            need = ops.emit_route_bytes(n, m, block=block)
+            for route in ("resident", "streaming"):
+                assert need[route] >= prev[route], \
+                    (route, n, m, block, need, prev)
+                prev[route] = need[route]
+
+
+def test_route_flip_exactly_at_budget_boundary_property():
+    """At every size: budget == need[route] keeps the route, one byte
+    less drops to the next cheaper regime.  Exhaustive over the ladder,
+    not just one hand-picked size."""
+    for n, m in _policy_sizes():
+        need = ops.emit_route_bytes(n, m)
+        assert need["streaming"] <= need["resident"] or n + m < 4096
+        r_hi = ops.choose_emit_route(n, m, budget=need["resident"])
+        assert r_hi == "resident", (n, m)
+        lo = ops.choose_emit_route(n, m, budget=need["resident"] - 1)
+        assert lo == ("streaming" if need["streaming"]
+                      <= need["resident"] - 1 else "xla"), (n, m)
+        assert ops.choose_emit_route(n, m, budget=need["streaming"]) \
+            in ("resident", "streaming")
+        assert ops.choose_emit_route(
+            n, m, budget=min(need["streaming"], need["resident"]) - 1) \
+            == "xla", (n, m)
+        assert ops.choose_emit_route(n, m, budget=0) == "xla"
+
+
+def test_max_pairs_zero_builds_no_kernel_on_any_route():
+    """max_pairs == 0 must short-circuit *before* pallas_call on every
+    route — proven by capturing pallas_call invocations, not just by
+    output shape."""
+    from repro.analysis import capture_pallas_calls
+
+    S, U = paper_workload(seed=37, n_total=256, alpha=1.0)
+    for route in ("resident", "streaming", "xla", "auto"):
+        records = []
+        with capture_pallas_calls(records):
+            pairs, count = ops.twopass_pairs_pallas(
+                S, U, 0, interpret=True, route=route)
+        assert pairs.shape == (0, 2), route
+        assert count > 0                     # the true K is still exact
+        emit_calls = [r for r in records if "emit" in r.kernel_name]
+        assert not emit_calls, (route, [r.kernel_name for r in records])
+
+
+# ---------------------------------------------------------------------------
 # the real thresholds, at real sizes (interpret mode, small K caps)
 # ---------------------------------------------------------------------------
 
