@@ -12,8 +12,20 @@ Rows:
                                       query sharded over a P-device mesh
                                       (backend="distributed")
   twopass_pairs_n{N}_a{alpha}       — exact enumeration, K pairs emitted
+
+Serving-layer rows (``repro.serve`` driven through its churn harness):
+  serve/churn_p99_query       — steady-state p99 query latency under
+                                multi-tenant churn (smoke scale, gated)
+  serve/churn_rebuild_p50     — double-buffered rebuild+publish median
+                                (smoke scale, gated)
+  serve/compile_cold|warm     — first-compile vs persistent-cache
+                                warm-start (gate:false — compile-bound)
+  serve/churn_n1e6_*          — full-scale trajectory: 1e6 regions,
+                                1e4 moves/tick (full mode only)
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -39,6 +51,78 @@ def _moves(rng, svc: DDMService, b: int, d: int):
     lo = rng.uniform(0, 9e5, (b, d)).astype(np.float32)
     hi = lo + rng.uniform(1.0, 5e3, (b, d)).astype(np.float32)
     return idx, lo, hi
+
+
+def _serve_rows(prefix: str, stats: dict, extra: str = "") -> None:
+    """Emit the serving harness' steady-state stats as bench rows."""
+    lag = 0.0
+    for tm in stats["metrics"]["tenants"].values():
+        lag = max(lag, tm["rebuild_lag_versions"]["max"])
+    derived = (f"parity={stats['parity_checks']};max_lag={lag:g}"
+               + (f";{extra}" if extra else ""))
+    row(f"{prefix}_p99_query", stats["p99_query_s"], derived)
+    row(f"{prefix}_p99_stale", stats["p99_stale_query_s"],
+        "mid-churn answers only")
+    row(f"{prefix}_rebuild_p50", stats["rebuild_p50_s"],
+        "capture+build+publish")
+    row(f"{prefix}_rebuild_p99", stats["rebuild_p99_s"], "")
+
+
+def _compile_cache_rows() -> None:
+    """First-compile vs warm-start through the persistent compilation
+    cache: two fresh ``MatchPlan`` instances at shapes nothing else in
+    this process compiles — the first XLA compile misses the disk cache
+    and writes it, the second should be served from it.  Compile-bound,
+    so both rows are trajectory-only (gate:false in the baseline)."""
+    import tempfile
+
+    from repro.core.engine import MatchPlan
+    from repro.serve import compile_cache
+
+    cache_dir = tempfile.mkdtemp(prefix="repro-jaxcache-")
+    compile_cache.enable(cache_dir)
+    S, U = paper_workload(seed=13, n_total=2994, alpha=5.0)
+    spec = MatchSpec(algo="itm", capacity="fixed", max_pairs=64)
+
+    def first_call_s() -> float:
+        plan = MatchPlan(spec, S.n, U.n, S.d)
+        t0 = time.perf_counter()
+        plan.count(S, U)
+        return time.perf_counter() - t0
+
+    cold = first_call_s()
+    warm = first_call_s()
+    row("serve/compile_cold", cold, "persistent-cache miss (writes it)")
+    row("serve/compile_warm", warm,
+        f"cache hit;speedup={cold / max(warm, 1e-9):.1f}x")
+
+
+def run_smoke() -> None:
+    """Smoke-scale serving churn: the CI-gated p99/rebuild rows plus the
+    (ungated) compile-cache comparison."""
+    from repro.serve.harness import run_churn
+
+    stats = run_churn(tenants=2, n_total=1024, ticks=4, warmup=2,
+                      moves_per_tick=32, queries_per_tick=24,
+                      max_batch=32, cap_hint=256, seed=1)
+    assert stats["parity_checks"] > 0, "serving oracle never exercised"
+    _serve_rows("serve/churn", stats,
+                extra="tenants=2;n=1024;moves=32/tick")
+    _compile_cache_rows()
+
+
+def run_serving_full() -> None:
+    """Full-scale churn trajectory — the ISSUE's 1e6-regions / 1e4-moves
+    regime.  Never gated (full runs have no baseline); rows chart the
+    large-N serving envelope over time."""
+    from repro.serve.harness import run_churn
+
+    stats = run_churn(tenants=1, n_total=1_000_000, ticks=3, warmup=1,
+                      moves_per_tick=10_000, queries_per_tick=64,
+                      max_batch=64, cap_hint=8192, seed=2,
+                      d_cycle=(1,))
+    _serve_rows("serve/churn_n1e6", stats,
+                extra="n=1e6;moves=1e4/tick")
 
 
 def run():
@@ -84,6 +168,8 @@ def run():
         _, k = plan.pairs(S, U)
         t = bench(plan.pairs, S, U)
         row(f"twopass_pairs_n{n_total}_a{alpha:g}", t, f"K={k}")
+
+    run_serving_full()
 
 
 if __name__ == "__main__":

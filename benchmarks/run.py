@@ -64,10 +64,11 @@ def smoke() -> None:
             row(f"smoke/{algo}_{backend}_n{SMOKE_N}", t,
                 f"K={k};retraces=0")
 
-    from . import large_n_emit, plan_reuse
+    from . import ddm_dynamic, large_n_emit, plan_reuse
 
     plan_reuse.run_smoke()
     large_n_emit.run_smoke()
+    ddm_dynamic.run_smoke()
     print("# smoke_parity_ok", flush=True)
 
 

@@ -1,0 +1,34 @@
+"""Repo-level pytest config.
+
+The full tier-1 suite compiles thousands of distinct XLA executables in
+one process; on CPU jaxlib this eventually segfaults inside
+``backend.compile`` once enough live executables accumulate (the seed
+suite crashes the same way at the same cumulative point).  Dropping
+jit/pjit caches between test modules caps the number of live
+executables and keeps the process healthy; plans retrace on next use,
+which individual tests already tolerate (every ``no_retrace`` window
+warms up inside its own test).
+"""
+
+import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
+def pytest_runtest_setup(item):
+    if not os.environ.get("REPRO_LOG_MAPS"):
+        return
+    try:
+        maps = sum(1 for _ in open(f"/proc/{os.getpid()}/maps"))
+        with open("/tmp/maps.log", "a") as fh:
+            fh.write(f"{maps}\t{item.nodeid}\n")
+    except Exception:
+        pass

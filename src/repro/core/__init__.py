@@ -39,7 +39,8 @@ from .regions import (Regions, make_regions, paper_workload,
 from .engine import (ALGOS, BACKENDS, CAPACITY_POLICIES, MatchPlan,
                      MatchSpec, build_plan)
 from .dd_match import match_count, match_pairs, block_mask, pairs_to_set
-from .dynamic import DDMService
+from .dynamic import (DDMService, DDMSnapshot, StoreView,
+                      describe_move_index_errors)
 from . import brute, grid, itm, sbm
 
 __all__ = [
@@ -48,5 +49,6 @@ __all__ = [
     "MatchSpec", "MatchPlan", "build_plan",
     "ALGOS", "BACKENDS", "CAPACITY_POLICIES",
     "match_count", "match_pairs", "block_mask", "pairs_to_set",
-    "DDMService", "brute", "grid", "itm", "sbm",
+    "DDMService", "DDMSnapshot", "StoreView",
+    "describe_move_index_errors", "brute", "grid", "itm", "sbm",
 ]

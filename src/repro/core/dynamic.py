@@ -40,13 +40,113 @@ int64-encoded keys, not with per-region Python loops.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import numpy as np
 import jax.numpy as jnp
 
 from . import itm
-from .engine import MatchPlan, MatchSpec
+from .engine import MatchPlan, MatchSpec, build_plan
 from .regions import Regions
+
+
+def describe_move_index_errors(idx: np.ndarray, lo: np.ndarray,
+                               hi: np.ndarray, n: int, kind: str,
+                               max_report: int = 5) -> list[str]:
+    """Human-readable problems in a batched ``update_regions`` request.
+
+    The engine-side companion of ``engine.describe_pair_range_errors``:
+    instead of letting a bad index silently wrap (numpy's negative
+    indexing) or explode as an ``IndexError`` deep inside a jitted
+    gather, every problem class names up to ``max_report`` offending
+    batch slots with their values and the valid range.
+    """
+    def _offenders(slots, fmt):
+        shown = ", ".join(fmt(int(t)) for t in slots[:max_report])
+        more = (f", … {len(slots) - max_report} more"
+                if len(slots) > max_report else "")
+        return shown + more
+
+    problems: list[str] = []
+    bad = np.nonzero((idx < 0) | (idx >= n))[0]
+    if bad.size:
+        problems.append(
+            f"{bad.size} {kind} move index(es) outside [0, {n}): "
+            + _offenders(bad, lambda t: f"slot {t}: idx={int(idx[t])}"))
+    finite = np.isfinite(lo).all(axis=-1) & np.isfinite(hi).all(axis=-1)
+    bad_f = np.nonzero(~finite)[0]
+    if bad_f.size:
+        problems.append(
+            f"{bad_f.size} move(s) with non-finite extents: "
+            + _offenders(bad_f, lambda t: f"slot {t}: lo={lo[t].tolist()}, "
+                                          f"hi={hi[t].tolist()}"))
+    return problems
+
+
+@dataclasses.dataclass(frozen=True)
+class DDMSnapshot:
+    """Immutable, self-contained view of one region-store version.
+
+    Holds its *own copies* of the coordinates (host + device) plus both
+    interval trees, so queries against a snapshot are stable under
+    concurrent ``update_regions`` churn — a reader sees the captured
+    region set in full, never a torn mix of old and new extents.  The
+    serving layer's double-buffered rebuild publishes these: writers
+    build a fresh snapshot off the read path and atomically swap it in.
+    """
+
+    version: int
+    s_lo: np.ndarray
+    s_hi: np.ndarray
+    u_lo: np.ndarray
+    u_hi: np.ndarray
+    S: Regions
+    U: Regions
+    tree_S: itm.ITree
+    tree_U: itm.ITree
+
+    def target(self, kind: str) -> tuple[itm.ITree, Regions]:
+        """(tree, regions) pair for querying the ``kind`` set."""
+        if kind == "sub":
+            return self.tree_S, self.S
+        return self.tree_U, self.U
+
+    def oracle_ids(self, kind: str, q_lo, q_hi) -> set[int]:
+        """Brute-force ids of the ``kind`` set overlapping one box —
+        the reference a served answer must match exactly."""
+        lo, hi = (self.s_lo, self.s_hi) if kind == "sub" \
+            else (self.u_lo, self.u_hi)
+        q_lo = np.asarray(q_lo, np.float32).reshape(-1)
+        q_hi = np.asarray(q_hi, np.float32).reshape(-1)
+        ok = np.all((lo < q_hi[None, :]) & (q_lo[None, :] < hi), axis=-1)
+        return set(np.nonzero(ok)[0].astype(int).tolist())
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreView:
+    """Cheap coordinate copy of a store at one version (capture phase).
+
+    ``DDMService.capture()`` runs under the writer's lock in O(n) copy
+    time; ``build()`` does the expensive O(n lg n) tree construction
+    with no lock held — the two-phase split is what makes rebuilds
+    non-blocking for both writers and readers.
+    """
+
+    version: int
+    s_lo: np.ndarray
+    s_hi: np.ndarray
+    u_lo: np.ndarray
+    u_hi: np.ndarray
+
+    def build(self) -> DDMSnapshot:
+        S = Regions(jnp.asarray(self.s_lo), jnp.asarray(self.s_hi))
+        U = Regions(jnp.asarray(self.u_lo), jnp.asarray(self.u_hi))
+        return DDMSnapshot(
+            version=self.version,
+            s_lo=self.s_lo, s_hi=self.s_hi,
+            u_lo=self.u_lo, u_hi=self.u_hi,
+            S=S, U=U,
+            tree_S=itm.build_tree(S), tree_U=itm.build_tree(U))
 
 
 class DDMService:
@@ -65,7 +165,7 @@ class DDMService:
     """
 
     def __init__(self, S: Regions, U: Regions, cap_hint: int = 64,
-                 spec: MatchSpec | None = None):
+                 spec: MatchSpec | None = None, plan_key: Any = None):
         assert S.d == U.d, (S.d, U.d)
         self.d = S.d
         self.s_lo = np.asarray(S.lo, np.float32).copy()   # (n, d)
@@ -74,6 +174,7 @@ class DDMService:
         self.u_hi = np.asarray(U.hi, np.float32).copy()
         self._tree_S = None
         self._tree_U = None
+        self.version = 0            # bumped once per applied move batch
         self.cap_hint = cap_hint
         if spec is None:
             spec = MatchSpec(algo="itm", capacity="grow",
@@ -83,9 +184,14 @@ class DDMService:
             # spec pins max_pairs explicitly
             spec = dataclasses.replace(spec, max_pairs=cap_hint)
         self.spec = spec
-        # the plan is per-service (not build_plan-cached): its memoized
-        # grow capacity tracks THIS service's churn history
-        self.plan = MatchPlan(spec, S.n, U.n, self.d)
+        if plan_key is None:
+            # the plan is per-service (not build_plan-cached): its
+            # memoized grow capacity tracks THIS service's churn history
+            self.plan = MatchPlan(spec, S.n, U.n, self.d)
+        else:
+            # serving-layer hook: one memoized plan per (tenant, spec)
+            # key, shared between the service and its server wrapper
+            self.plan = build_plan(spec, S.n, U.n, self.d, key=plan_key)
         self.pairs: set[tuple[int, int]] = set()
 
     # -- tree cache ---------------------------------------------------------
@@ -104,6 +210,34 @@ class DDMService:
         if self._tree_U is None:
             self._tree_U = itm.build_tree(self._U())
         return self._tree_U
+
+    # -- shadow-rebuild support (the serving layer's double buffer) ----------
+    def capture(self) -> StoreView:
+        """O(n) coordinate copy of the store at its current version.
+
+        Run this under whatever lock guards mutation; the returned
+        view's ``build()`` (the O(n lg n) tree construction) needs no
+        lock and never blocks readers of a previously built snapshot.
+        """
+        return StoreView(self.version,
+                         self.s_lo.copy(), self.s_hi.copy(),
+                         self.u_lo.copy(), self.u_hi.copy())
+
+    def snapshot(self) -> DDMSnapshot:
+        """Capture + build in one step (single-threaded convenience)."""
+        return self.capture().build()
+
+    def query_snapshot(self, snap: DDMSnapshot, kind: str,
+                       q_lo, q_hi):
+        """Batched verified ids of the ``kind`` set overlapping each of
+        the (b, d) query boxes, answered *entirely from* ``snap`` — the
+        live store is never read, so concurrent churn cannot tear the
+        result.  Returns ``(ids (b, cap) −1-padded, counts (b,))``.
+        """
+        tree, opp = snap.target(kind)
+        return self.plan.query(tree, opp,
+                               jnp.asarray(q_lo, jnp.float32),
+                               jnp.asarray(q_hi, jnp.float32))
 
     # -- batched verified overlap query --------------------------------------
     def _overlap_ids(self, kind: str, q_lo: np.ndarray,
@@ -135,6 +269,67 @@ class DDMService:
                              u_idx[keep].astype(int).tolist()))
         return self.pairs
 
+    # -- move-batch validation ------------------------------------------------
+    def _prepare_moves(self, kind: str, idx, new_lo, new_hi):
+        """Validate + dedup one batched move request.
+
+        Raises ``ValueError`` naming the offending batch slots and the
+        valid index range (``describe_move_index_errors``) instead of
+        letting a bad index wrap via numpy negative indexing or crash
+        as an ``IndexError`` inside a jitted gather.  Duplicate indices
+        keep the last occurrence (sequential "last write wins").
+        """
+        if kind not in ("sub", "upd"):
+            raise ValueError(f"kind must be 'sub' or 'upd', got {kind!r}")
+        idx = np.atleast_1d(np.asarray(idx))
+        if not np.issubdtype(idx.dtype, np.integer):
+            raise ValueError(
+                f"move indices must be integers, got dtype {idx.dtype} "
+                f"(shape {idx.shape})")
+        idx = idx.astype(np.int64)
+        new_lo = np.asarray(new_lo, np.float32).reshape(idx.shape[0], self.d)
+        new_hi = np.asarray(new_hi, np.float32).reshape(idx.shape[0], self.d)
+        n = (self.s_lo if kind == "sub" else self.u_lo).shape[0]
+        problems = describe_move_index_errors(idx, new_lo, new_hi, n, kind)
+        if problems:
+            raise ValueError(
+                f"invalid update_regions batch (b={idx.shape[0]}): "
+                + "; ".join(problems))
+        if idx.shape[0] == 0:
+            return idx, new_lo, new_hi
+        _, last = np.unique(idx[::-1], return_index=True)
+        keep = np.sort(idx.shape[0] - 1 - last)
+        return idx[keep], new_lo[keep], new_hi[keep]
+
+    def _apply(self, kind: str, idx, new_lo, new_hi) -> None:
+        """Write a validated move batch into the store (version bump +
+        deferred tree invalidation)."""
+        own_lo, own_hi = ((self.s_lo, self.s_hi) if kind == "sub"
+                          else (self.u_lo, self.u_hi))
+        own_lo[idx] = new_lo
+        own_hi[idx] = new_hi
+        self.version += 1
+        if kind == "sub":
+            self._tree_S = None            # deferred rebuild
+        else:
+            self._tree_U = None
+
+    def apply_moves(self, kind: str, idx, new_lo, new_hi) -> int:
+        """Validated coordinate update *without* delta reporting.
+
+        The serving layer's churn path: applies the batch to the store
+        (same validation and last-write-wins dedup as
+        ``update_regions``) and returns the number of distinct regions
+        moved, but skips the old-vs-new overlap queries that compute
+        the pair ledger deltas — the server re-derives visibility from
+        the next published snapshot instead.
+        """
+        idx, new_lo, new_hi = self._prepare_moves(kind, idx, new_lo, new_hi)
+        if idx.shape[0] == 0:
+            return 0
+        self._apply(kind, idx, new_lo, new_hi)
+        return int(idx.shape[0])
+
     # -- the dynamic operation (paper §3), batched -----------------------------
     def update_regions(self, kind: str, idx, new_lo, new_hi):
         """Move/resize a batch of regions of one kind in a single tick.
@@ -144,19 +339,13 @@ class DDMService:
         net pair deltas, identical to applying the b single-region
         updates in sequence (duplicate indices: last occurrence wins and
         the deltas are the sequence's net effect).  A zero-churn batch
-        (b == 0) is a no-op returning two empty sets.
+        (b == 0) is a no-op returning two empty sets.  Bad batches —
+        out-of-range or non-integer indices, non-finite extents — raise
+        ``ValueError`` naming the offending slots and ranges.
         """
-        assert kind in ("sub", "upd")
-        idx = np.atleast_1d(np.asarray(idx, np.int64))
-        new_lo = np.asarray(new_lo, np.float32).reshape(idx.shape[0], self.d)
-        new_hi = np.asarray(new_hi, np.float32).reshape(idx.shape[0], self.d)
+        idx, new_lo, new_hi = self._prepare_moves(kind, idx, new_lo, new_hi)
         if idx.shape[0] == 0:
             return set(), set()
-        # duplicate indices: keep the last occurrence (sequential "last
-        # write wins"); deltas below are then the exact net of the sequence.
-        _, last = np.unique(idx[::-1], return_index=True)
-        keep = np.sort(idx.shape[0] - 1 - last)
-        idx, new_lo, new_hi = idx[keep], new_lo[keep], new_hi[keep]
         b = idx.shape[0]
 
         own_lo, own_hi = ((self.s_lo, self.s_hi) if kind == "sub"
@@ -167,12 +356,7 @@ class DDMService:
         ids = self._overlap_ids(kind, q_lo, q_hi)              # (2b, cap)
         old_ids, new_ids = ids[:b], ids[b:]
 
-        own_lo[idx] = new_lo
-        own_hi[idx] = new_hi
-        if kind == "sub":
-            self._tree_S = None            # deferred rebuild
-        else:
-            self._tree_U = None
+        self._apply(kind, idx, new_lo, new_hi)
 
         # vectorized delta: encode (s, u) as s*m + u in int64, set-diff
         m = max(self.u_lo.shape[0], 1)

@@ -625,11 +625,19 @@ def itm_flatten_pairs(T: itm.ITree, q_lo: Array, q_hi: Array, per_q: int,
 
 
 @functools.lru_cache(maxsize=256)
-def build_plan(spec: MatchSpec, n_sub: int, n_upd: int, d: int) -> MatchPlan:
+def build_plan(spec: MatchSpec, n_sub: int, n_upd: int, d: int,
+               key: Any = None) -> MatchPlan:
     """Compile ``spec`` for a problem shape; memoized on all arguments.
 
     Returns the same ``MatchPlan`` (with its warm jit caches and resolved
     capacities) for repeated identical requests — plan-once-call-many is
     the intended usage, and the deprecation shims lean on this cache.
+
+    ``key`` is a namespace hook: plans whose memoized state (grow
+    capacities, trace history) must not be shared across otherwise
+    identical requests pass a distinct hashable key.  The serving layer
+    uses ``key=(server_id, tenant)`` so every ``(tenant, MatchSpec)``
+    pair gets exactly one plan whose capacity ladder tracks that
+    tenant's own churn.
     """
     return MatchPlan(spec, n_sub, n_upd, d)

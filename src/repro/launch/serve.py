@@ -1,79 +1,23 @@
-"""Serving launcher: prefill a batch of prompts, decode with KV caches.
+"""Deprecated module path — the LM demo moved to ``repro.launch.lm_serve``.
 
-Demonstrates the same prefill/decode step functions the dry-run lowers
-onto the production mesh, including the DDM-planned sliding-window read
-for ``attn_pattern=ddm_window`` archs.
-
-Example:
-    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b \
-        --smoke --batch 4 --prompt-len 48 --gen 32
+``repro.serve`` is the DDM serving subsystem (multi-tenant
+``DDMServer``); this LM prefill/decode launcher now lives at
+``repro.launch.lm_serve`` so the two cannot be confused.  This stub
+forwards (one ``DeprecationWarning``, attributed to the importer) and
+keeps ``python -m repro.launch.serve`` working.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from .lm_serve import main
 
-from repro.configs import get_config, get_smoke_config
-from repro.models import transformer as T
+__all__ = ["main"]
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_smoke_config(args.arch) if args.smoke else \
-        get_config(args.arch)
-    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
-    B = args.batch
-    max_len = args.prompt_len + args.gen + 1
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
-                                       (B, args.prompt_len)), jnp.int32)
-    frames = None
-    if cfg.family == "audio":
-        frames = jnp.asarray(
-            0.1 * rng.normal(size=(B, cfg.enc_frames, cfg.d_model)),
-            jnp.bfloat16)
-
-    cache = T.init_cache(cfg, B, max_len)
-    prefill = jax.jit(lambda p, t, c, f: T.prefill(p, t, cfg, c,
-                                                   frames=f))
-    step = jax.jit(lambda p, t, c, i: T.decode_step(p, t, cfg, c, i))
-
-    t0 = time.time()
-    logits, cache = prefill(params, prompts, cache, frames)
-    logits.block_until_ready()
-    t_pre = time.time() - t0
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = step(params, tok, cache,
-                             jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-
-    gen = np.asarray(jnp.concatenate(out, axis=1))
-    print(f"arch={cfg.name} pattern={cfg.attn_pattern}")
-    print(f"prefill: {B}x{args.prompt_len} tokens in {t_pre:.2f}s "
-          f"({B * args.prompt_len / max(t_pre, 1e-9):.0f} tok/s)")
-    print(f"decode:  {B}x{args.gen} tokens in {t_dec:.2f}s "
-          f"({B * args.gen / max(t_dec, 1e-9):.1f} tok/s)")
-    print("sample token ids:", gen[0, :16].tolist())
-
+warnings.warn(
+    "repro.launch.serve has moved to repro.launch.lm_serve "
+    "(repro.serve is the DDM serving layer); update the import",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

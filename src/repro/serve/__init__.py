@@ -1,0 +1,38 @@
+"""repro.serve — the production DDM serving layer.
+
+Multi-tenant, asynchronous serving on top of the ``MatchSpec →
+build_plan → MatchPlan`` engine and ``DDMService``: per-tenant
+namespaces with one memoized plan per ``(tenant, MatchSpec)``, request
+batching + admission control (max-batch/max-delay coalescing, bounded
+queues, explicit shed/reject), double-buffered interval-tree rebuilds
+so ``update_regions`` churn never blocks readers (every response
+carries a snapshot version + staleness bound), and a JSON metrics
+surface for the bench gate.
+
+    from repro.serve import DDMServer
+
+    server = DDMServer(compilation_cache=True)
+    server.add_tenant("sim-a", S, U)
+    server.start()
+    fut = server.submit("sim-a", "sub", lo, hi)   # future → QueryResult
+    server.update_regions("sim-a", "sub", idx, new_lo, new_hi)
+    ...
+    server.stop()
+
+``python -m repro.serve --smoke`` runs the self-checking multi-tenant
+churn harness (set-parity vs a brute oracle, zero steady-state
+retraces).  The LM inference demo that used to live at
+``repro.launch.serve`` is now ``repro.launch.lm_serve``.
+"""
+from .admission import AdmissionError, AdmissionPolicy
+from .batching import BatchPolicy, QueryResult
+from .compile_cache import enable as enable_compilation_cache
+from .metrics import Metrics
+from .server import DDMServer
+from .tenancy import Tenant
+
+__all__ = [
+    "DDMServer", "Tenant", "Metrics",
+    "AdmissionError", "AdmissionPolicy", "BatchPolicy", "QueryResult",
+    "enable_compilation_cache",
+]

@@ -1,0 +1,110 @@
+"""Request batching: queued point/region queries coalesced into batched
+``MatchPlan.query`` calls.
+
+The engine's query path is batched and retrace-free only at *stable
+shapes*: ``plan.query`` jits per batch size, so a naive "batch whatever
+is queued" policy retraces on every distinct queue depth.  The batcher
+therefore pads every device call to exactly ``BatchPolicy.max_batch``
+rows with sentinel boxes (``lo=+inf, hi=-inf`` — the tree walk prunes
+them at the root, so padding costs one lane each, no retrace ever).
+
+Coalescing policy: a batch launches when it is full (``max_batch``
+requests of one (tenant, target) stream) or when the oldest queued
+request has waited ``max_delay_s`` — the classic max-batch/max-delay
+trade between throughput and tail latency.  Batch occupancy
+(filled/max_batch) is recorded per launch so the trade is observable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+TARGETS = ("sub", "upd")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Knobs for the coalescing loop."""
+
+    max_batch: int = 256      # device-call batch rows (also the pad size)
+    max_delay_s: float = 2e-3  # oldest-request age that forces a launch
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_delay_s < 0:
+            raise ValueError(
+                f"max_delay_s must be >= 0, got {self.max_delay_s}")
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One queued box query against a tenant's ``target`` region set."""
+
+    tenant: str
+    target: str               # "sub" | "upd" — the set being searched
+    lo: np.ndarray            # (d,)
+    hi: np.ndarray            # (d,)
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """What a completed query future resolves to."""
+
+    ids: np.ndarray           # (k,) int32 region ids, overlap-verified
+    version: int              # snapshot version the answer was read from
+    staleness: int            # store_version - snapshot version at launch
+    latency_s: float          # submit → resolution wall time
+
+    def id_set(self) -> set[int]:
+        return set(self.ids.astype(int).tolist())
+
+
+def pad_boxes(reqs: list[QueryRequest], d: int,
+              max_batch: int) -> tuple[np.ndarray, np.ndarray]:
+    """(max_batch, d) query boxes, sentinel-padded to a static shape.
+
+    The sentinel (``lo=+inf, hi=-inf``) makes the interval-tree root
+    prune immediately (``maxupper <= q_lo``), so pad rows return zero
+    hits without a dedicated masking path.
+    """
+    lo = np.full((max_batch, d), np.inf, np.float32)
+    hi = np.full((max_batch, d), -np.inf, np.float32)
+    for i, r in enumerate(reqs):
+        lo[i] = r.lo
+        hi[i] = r.hi
+    return lo, hi
+
+
+def execute_batch(svc, snap, target: str, reqs: list[QueryRequest],
+                  max_batch: int,
+                  store_version: int) -> list[QueryResult]:
+    """Run one coalesced ``plan.query`` call and resolve every future.
+
+    All answers come from ``snap`` (an immutable ``DDMSnapshot``) — the
+    store may be mid-churn, which is exactly why the response carries
+    ``version`` and ``staleness`` instead of pretending to be current.
+    Returns the results (in request order) for metrics recording.
+    """
+    d = snap.s_lo.shape[1]
+    q_lo, q_hi = pad_boxes(reqs, d, max_batch)
+    ids, _ = svc.query_snapshot(snap, target, q_lo, q_hi)
+    ids = np.asarray(ids)
+    t_done = time.perf_counter()
+    staleness = store_version - snap.version
+    results = []
+    for i, r in enumerate(reqs):
+        row = ids[i]
+        res = QueryResult(
+            ids=row[row >= 0].astype(np.int32),
+            version=snap.version,
+            staleness=staleness,
+            latency_s=t_done - r.t_submit)
+        results.append(res)
+        r.future.set_result(res)
+    return results
