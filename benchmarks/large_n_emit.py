@@ -1,22 +1,30 @@
-"""Large-N emit-route sweep: resident vs streaming vs XLA pass 2.
+"""Large-N emit-route sweep: resident vs streaming vs CSR vs XLA pass 2.
 
 The paper's evaluation centers on the 1e6-region regime; this sweep
 drives the two-pass pair enumeration through every emit route the
 byte-budget policy allows at each size (``kernels.ops.choose_emit_route``:
-resident tables → streamed tables → XLA pass 2), asserts the routes are
-bit-identical, and times them.  On this CPU host the Pallas routes run
-in interpret mode, so their absolute timings are trajectory-only signal;
-the XLA rows and the cross-route parity asserts are the load-bearing
-part, and on a real TPU the same module times the compiled kernels.
+resident tables → streamed tables → CSR compressed emit → XLA pass 2),
+asserts the routes are bit-identical on decoded pairs, and times them.
+On this CPU host the Pallas routes run in interpret mode, so their
+absolute timings are trajectory-only signal; the XLA rows and the
+cross-route parity asserts are the load-bearing part, and on a real TPU
+the same module times the compiled kernels.
+
+The CSR rows are the 1e7-regime story: past n+m ≈ 2e6 the streamed
+tables no longer fit the VMEM budget, and the csr route's footprint is
+constant in n+m (one table window + two scratch rows), so the sweep's
+top sizes (5e6, 1e7) run csr + xla only.  ``emit_csr_decode_n{N}`` rows
+time the lazy ``CSRPairs`` view's window decode separately from pass 1.
 
 Rows:
   large_n/emit_{route}_n{N} — one ``plan.pairs`` call (us), route pinned
+  large_n/emit_csr_decode_n{N} — one 8192-slot ``CSRPairs.decode`` (us)
   derived: exact K, the route the policy would pick, truncation flag
 
 ``run_smoke()`` is the CI subset: one size per side of the resident
-threshold (n+m = 1e5 and 6e5 — the latter past the old ~5.2e5 VMEM
-fallback, so CI proves the streaming kernel, not the fallback, runs at
-sizes the resident kernel cannot reach).
+threshold (n+m = 1e5 and 6e5) plus 2.2e6 — past the streaming route's
+~2.06e6 byte-budget bound, so CI proves the csr route, not a fallback,
+is what runs in the regime the dense tables cannot reach.
 """
 from __future__ import annotations
 
@@ -30,14 +38,15 @@ from .common import bench, row
 ALPHA = 0.5
 CAP = 8192          # fixed capacity: bounds the interpret-mode grid
 BLOCK = MatchSpec().block   # the block the benchmarked plans compile with
-FULL_SIZES = (100_000, 500_000, 1_000_000, 2_000_000)
-SMOKE_SIZES = (100_000, 600_000)
+FULL_SIZES = (100_000, 500_000, 1_000_000, 2_000_000, 5_000_000,
+              10_000_000)
+SMOKE_SIZES = (100_000, 600_000, 2_200_000)
 
 
 def _routes_for(n: int, m: int) -> list[str]:
     need = ops.emit_route_bytes(n, m, block=BLOCK)
     budget = ops._EMIT_VMEM_TABLE_BUDGET
-    routes = [r for r in ("resident", "streaming")
+    routes = [r for r in ("resident", "streaming", "csr")
               if need[r] <= budget]
     return routes + ["xla"]
 
@@ -55,15 +64,20 @@ def _sweep(sizes, iters: int = 2) -> None:
             pairs, k = plan.pairs(S, U)
             if route != "xla":
                 assert ops.last_emit_route() == route, (route, n_total)
+            dense = np.asarray(pairs)   # csr: assembles via decode windows
             if want_pairs is None:
-                want_pairs, want_k = np.asarray(pairs), k
+                want_pairs, want_k = dense, k
             else:
                 assert k == want_k, (route, n_total, k, want_k)
-                np.testing.assert_array_equal(np.asarray(pairs),
-                                              want_pairs)
+                np.testing.assert_array_equal(dense, want_pairs)
             t = bench(plan.pairs, S, U, iters=iters)
             row(f"large_n/emit_{route}_n{n_total}", t,
                 f"K={k};auto_route={auto};truncated={int(k > CAP)}")
+            if route == "csr":
+                t = bench(lambda p=pairs: np.asarray(p.decode(0, CAP)),
+                          iters=iters)
+                row(f"large_n/emit_csr_decode_n{n_total}", t,
+                    f"slots={CAP};nbytes={pairs.nbytes}")
 
 
 def run() -> None:
@@ -71,7 +85,7 @@ def run() -> None:
 
 
 def run_smoke() -> None:
-    """CI smoke: both sides of the resident threshold, parity-checked."""
+    """CI smoke: resident/streaming thresholds plus the csr regime."""
     _sweep(SMOKE_SIZES, iters=2)
 
 

@@ -237,12 +237,13 @@ def audit_emit_route_parity(report: Report, *, n: int = 4000,
                             block: int | None = None) -> None:
     """Assert ``emit_route_bytes`` matches the real kernels' specs.
 
-    Both emit kernels are traced abstractly at ``(n, m, max_pairs)``;
-    the policy's modeled bytes must bracket the spec-derived bytes to
-    within lane-padding slack (each table is padded up to the next 128
-    lanes, int32).  Drift in either direction — a kernel change not
-    reflected in the model, or a model change not reflected in the
-    kernels — is ``K_ROUTE_DRIFT``.
+    All three emit kernels are traced abstractly at ``(n, m,
+    max_pairs)``; the policy's modeled bytes must bracket the
+    spec-derived bytes to within lane-padding slack (each table is
+    padded up to the next 128 lanes, int32; the csr route's footprint
+    is all scratch, so its model must match exactly).  Drift in either
+    direction — a kernel change not reflected in the model, or a model
+    change not reflected in the kernels — is ``K_ROUTE_DRIFT``.
     """
     from ..kernels import emit as emit_kernel
     from ..kernels import ops
@@ -284,3 +285,32 @@ def audit_emit_route_parity(report: Report, *, n: int = 4000,
                 f"max_pairs={max_pairs}, block={block}) — the policy "
                 "and the kernels have drifted apart")
         report.note_audit("kernel", target)
+
+    # csr decode: different signature (packed table + padded perms +
+    # a dynamic window start) and an all-scratch footprint — the model
+    # must match the captured scratch exactly, no table slack.
+    target = "emit_route_parity:csr"
+    bl = emit_kernel.lane_pad(block)
+    win = emit_kernel.stream_window(bl)
+    e_pad = e + max((-e) % 128, win - e)
+    wrapped = functools.partial(emit_kernel.csr_decode_window, n=n, m=m,
+                                nslots=max_pairs, block=block)
+    caps = trace_kernel(wrapped, _i32(8, e_pad),
+                        _i32(1, emit_kernel.lane_pad(n + bl)),
+                        _i32(1, emit_kernel.lane_pad(m + bl)), _i32())
+    if len(caps) != 1:
+        report.add(
+            "kernel", "K_ROUTE_DRIFT", target,
+            f"expected exactly one pallas_call while tracing the csr "
+            f"decode kernel, captured {len(caps)}")
+        return
+    derived = derived_table_bytes(caps[0])
+    modeled = model["csr"]
+    if derived != modeled:
+        report.add(
+            "kernel", "K_ROUTE_DRIFT", target,
+            f"emit_route_bytes models {modeled} bytes for the csr "
+            f"route but the captured scratch implies {derived} at "
+            f"(n={n}, m={m}, max_pairs={max_pairs}, block={block}) — "
+            "the policy and the kernels have drifted apart")
+    report.note_audit("kernel", target)

@@ -14,6 +14,15 @@
     and the engine's empty-set contract promises a well-formed (0, 2)
     buffer.  The lint demands a literal ``max_pairs == 0`` comparison
     (either operand order) somewhere in the function body.
+
+``L_MODULE_DOCSTRING``
+    Modules under the documented subsystems (``repro/serve``,
+    ``repro/analysis``) must open with a substantive module docstring
+    (>= 120 characters) stating the module's contract and invariants —
+    snapshot immutability, audit-pass ordering, queue bounds — not a
+    one-line title.  These are the subsystems the architecture docs
+    point into; an undocumented module there rots the documentation
+    layer silently.
 """
 from __future__ import annotations
 
@@ -29,6 +38,11 @@ BANNED_CALLS = ("match_count", "match_pairs", "distributed_sbm_count")
 DEFINITION_MODULES = ("core/dd_match.py", "core/distributed.py")
 
 DEFAULT_ROOTS = ("src", "benchmarks")
+
+# subsystems whose modules must carry substantive docstrings (path
+# fragments matched against the linted file's normalized path)
+DOCSTRING_ROOTS = ("repro/serve", "repro/analysis")
+MIN_MODULE_DOCSTRING = 120
 
 
 def _call_name(node: ast.Call) -> str | None:
@@ -83,6 +97,18 @@ def lint_source(src: str, *, path: str, report: Report) -> None:
         report.add("lint", "L_DEPRECATED", f"{path}:{e.lineno or 0}",
                    f"unparseable module: {e.msg}")
         return
+
+    norm = "/" + str(path).replace("\\", "/")
+    if any(f"/{root}/" in norm for root in DOCSTRING_ROOTS):
+        doc = ast.get_docstring(tree) or ""
+        if len(doc.strip()) < MIN_MODULE_DOCSTRING:
+            report.add(
+                "lint", "L_MODULE_DOCSTRING", f"{path}:1",
+                f"module under {DOCSTRING_ROOTS} has "
+                f"{'no' if not doc else 'only a trivial'} module "
+                f"docstring ({len(doc.strip())} chars < "
+                f"{MIN_MODULE_DOCSTRING}) — serve/analysis modules "
+                "must state their contract and invariants up front")
 
     if not _is_definition_module(Path(path)):
         for node in ast.walk(tree):

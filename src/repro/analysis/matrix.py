@@ -160,6 +160,24 @@ def _i32(*shape):
     return jax.ShapeDtypeStruct(shape, jnp.int32)
 
 
+def _csr_abstract_args(n: int, m: int, *, block: int):
+    """Abstract (tab, perm_s_pad, perm_u_pad, w0) for the csr kernel.
+
+    Mirrors the shapes ``ops._csr_tables`` hands to
+    ``emit.csr_decode_window``: the packed table floored at the DMA
+    window, the permutations padded for fixed-run over-reads, and the
+    dynamic window-start scalar.
+    """
+    from ..kernels import emit as emit_kernel
+
+    bl = emit_kernel.lane_pad(block)
+    win = emit_kernel.stream_window(bl)
+    e = n + m
+    e_pad = e + max((-e) % 128, win - e)
+    return (_i32(8, e_pad), _i32(1, emit_kernel.lane_pad(n + bl)),
+            _i32(1, emit_kernel.lane_pad(m + bl)), _i32())
+
+
 def audit_ops_hotpaths(report: Report) -> None:
     """Target-scale jaxpr audit of the pallas backend's module jits."""
     from ..kernels import emit as emit_kernel
@@ -168,6 +186,7 @@ def audit_ops_hotpaths(report: Report) -> None:
     nb, mb = 30_720, 30_720           # brute family: 256-multiples,
     #                                   n*m just under the int32 bound
     ns = ms = 1_000_000               # sort family: the paper's regime
+    nc = mc = 5_000_000               # csr route: the 1e7 regime
     e = ns + ms
 
     entries = [
@@ -195,6 +214,15 @@ def audit_ops_hotpaths(report: Report) -> None:
          (_i32(e + 1), _i32(e), _i32(e), _i32(ns), _i32(ms)),
          dict(n=ns, m=ms, max_pairs=1 << 21, block=512,
               interpret=True), (I32,)),
+        # csr route at its own regime: n+m = 1e7, past both dense
+        # Pallas routes' budgets
+        ("ops._csr_tables", ops._csr_tables,
+         (_f32(nc), _f32(nc), _f32(mc), _f32(mc)),
+         dict(max_pairs=1 << 21, block=512), None),
+        ("emit.csr_decode_window", emit_kernel.csr_decode_window,
+         _csr_abstract_args(nc, mc, block=512),
+         dict(n=nc, m=mc, nslots=1 << 16, block=512,
+              interpret=True), (I32,)),
     ]
     for name, fn, args, static_kw, out_dtypes in entries:
         audit_fn(fn, args, target=name, report=report,
@@ -210,6 +238,7 @@ def kernel_matrix_entries():
 
     nr = mr = 100_000                  # resident-regime emit
     ns = ms = 1_000_000                # streaming-regime emit
+    nc = mc = 5_000_000                # csr-regime emit (1e7 total)
     nb = mb = 30_720                   # brute family (256-multiples)
     sweep_len = 2048 * 2049            # ≈ 2(n+m) at 1e6, block-aligned
     BH, Sq, dh = 8, 2048, 128
@@ -227,6 +256,10 @@ def kernel_matrix_entries():
          functools.partial(emit_kernel.twopass_emit_streaming, n=ns,
                            m=ms, max_pairs=1 << 21, block=512),
          emit_args(ns, ms, 1 << 21)),
+        ("emit_csr_decode",
+         functools.partial(emit_kernel.csr_decode_window, n=nc, m=mc,
+                           nslots=1 << 16, block=512),
+         _csr_abstract_args(nc, mc, block=512)),
         ("bfm_tile_counts",
          functools.partial(bfm_kernel.bfm_tile_counts, ts=256, tu=256),
          (_f32(nb, 2), _f32(nb, 2), _f32(mb, 2), _f32(mb, 2))),

@@ -97,8 +97,29 @@ def pairs_to_set(pairs: Array, m: int, n: int | None = None, *,
     names the offending slots, their (s, u) values, and the valid
     ranges; pass ``context=plan`` (anything with a useful ``repr``) to
     have it appear in the message.
+
+    A lazy CSR view (``kernels.ops.CSRPairs``) is consumed window by
+    window — validation and set assembly run per chunk, so the dense
+    ``(cap, 2)`` buffer is never materialized even for quadratic-K
+    caps (duck-typed on ``windows()`` to keep core free of a kernels
+    import).
     """
     from .engine import describe_pair_range_errors
+
+    out: set[int] = set()
+    if hasattr(pairs, "windows") and hasattr(pairs, "decode"):
+        for w0, arr in pairs.windows():
+            problems = describe_pair_range_errors(arr, m, n)
+            if problems:
+                ctx = (f"; context={context!r}" if context is not None
+                       else "")
+                raise ValueError(
+                    "pair buffer index-range failure (CSR window at "
+                    f"slot {w0}): " + "; ".join(problems) + ctx)
+            arr = arr[arr[:, 0] >= 0]
+            out.update((arr[:, 0].astype(np.int64) * m
+                        + arr[:, 1]).tolist())
+        return out
 
     arr = np.asarray(pairs)
     problems = describe_pair_range_errors(arr, m, n)

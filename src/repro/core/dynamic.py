@@ -43,6 +43,7 @@ import dataclasses
 from typing import Any
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import itm
@@ -110,6 +111,21 @@ class DDMSnapshot:
         if kind == "sub":
             return self.tree_S, self.S
         return self.tree_U, self.U
+
+    @property
+    def nbytes(self) -> int:
+        """Total host + device bytes this snapshot pins.
+
+        Sums every array leaf (host coordinate copies, device Regions,
+        both interval trees) — the figure the serving layer publishes
+        as the ``snapshot_bytes`` gauge so per-tenant double-buffered
+        memory (live snapshot + shadow build) is observable.
+        """
+        leaves = jax.tree_util.tree_leaves(
+            (self.s_lo, self.s_hi, self.u_lo, self.u_hi,
+             self.S, self.U, self.tree_S, self.tree_U))
+        return int(sum(leaf.nbytes for leaf in leaves
+                       if hasattr(leaf, "nbytes")))
 
     def oracle_ids(self, kind: str, q_lo, q_hi) -> set[int]:
         """Brute-force ids of the ``kind`` set overlapping one box —

@@ -125,10 +125,11 @@ class MatchSpec:
                 f"got {self.capacity}")
         if self.capacity == "fixed" and self.max_pairs is None:
             raise ValueError("capacity='fixed' requires max_pairs")
-        if self.emit_route not in ("auto", "resident", "streaming", "xla"):
+        if self.emit_route not in ("auto", "resident", "streaming", "csr",
+                                   "xla"):
             raise ValueError(
                 "emit_route must be one of ('auto', 'resident', "
-                f"'streaming', 'xla'), got {self.emit_route}")
+                f"'streaming', 'csr', 'xla'), got {self.emit_route}")
 
 
 class MatchPlan:
@@ -289,6 +290,17 @@ class MatchPlan:
 
         ``cap`` is resolved by the capacity policy; ``count`` is always
         the exact K (python int) even when a fixed buffer truncates.
+
+        On the pallas backend's ``csr`` emit route (chosen by the byte
+        policy past n+m ≈ 2e6, or pinned via ``MatchSpec.emit_route``)
+        the first element is a lazy ``kernels.ops.CSRPairs`` view
+        instead of a dense array: device memory stays O(n+m), and any
+        slot window decodes on demand (``view.decode(a, b)`` /
+        ``view.windows()``), bit-identical to the dense buffer's slice.
+        ``np.asarray(view)`` materializes the dense buffer for code
+        that needs it.  The capacity policies are unaffected — every
+        route reports exact K, and ``grow``/``exact`` re-emit over the
+        compressed offset arrays at the resolved capacity.
         """
         self._check(S, U)
         spec = self.spec
@@ -390,7 +402,10 @@ class MatchPlan:
         Resolves the spec's ``emit_route`` pin, or applies the byte-budget
         policy (``kernels.ops.choose_emit_route``) to this plan's problem
         shape under ``emit_budget``.  ``None`` for non-pallas backends and
-        for algorithms that do not reach the two-pass emit kernel.
+        for algorithms that do not reach the two-pass emit kernel.  For
+        d > 1 plans ``auto`` never resolves to ``csr`` — the verify pass
+        gathers from the dense dim-0 candidate buffer — and a pinned
+        ``csr`` raises inside ``pairs()``.
         """
         spec = self.spec
         if (spec.backend != "pallas"
@@ -401,7 +416,8 @@ class MatchPlan:
         from ..kernels import ops
         return ops.choose_emit_route(self.n_sub, self.n_upd,
                                      block=spec.block,
-                                     budget=spec.emit_budget)
+                                     budget=spec.emit_budget,
+                                     dense_only=self.d > 1)
 
     def _pairs_sbm_dim0(self, S: Regions, U: Regions, cap: int):
         spec = self.spec
@@ -411,7 +427,8 @@ class MatchPlan:
             return ops.twopass_pairs_pallas(S0, U0, cap, block=spec.block,
                                             interpret=spec.interpret,
                                             route=spec.emit_route,
-                                            budget=spec.emit_budget)
+                                            budget=spec.emit_budget,
+                                            dense_only=self.d > 1)
         f = self._jitted("twopass_emit", sbm._twopass_emit,
                          static_argnames=("max_pairs",))
         pairs, cnt_a, cnt_b = f(S0.lo[:, 0], S0.hi[:, 0],

@@ -38,6 +38,29 @@ them; here it is ONE kernel, in two size regimes:
     (to n+m ≈ 2e6 under the default 8 MiB budget) before the XLA
     fallback takes over.
 
+``csr_decode_window`` (CSR route: constant VMEM, nothing resident)
+    Past n+m ≈ 2e6 even the bare permutations outgrow VMEM, and for
+    quadratic-K workloads the dense ``(K, 2)`` output dominates HBM.
+    The CSR route drops both: pass 1's tables *are* a CSR matrix
+    (per-emitter offset + contiguous rank range into a sort
+    permutation), so the route keeps only the packed compacted table
+    plus the two permutations in HBM — O(n+m) words, never O(K) — and
+    decodes any window of slots on demand.  The decode kernel holds a
+    per-tile table window (same packing and bound as the streaming
+    route) and streams the *permutation runs* by DMA: the slots of one
+    output tile select a contiguous range of compacted emitters, and
+    each selected emitter contributes one contiguous ``block``-bounded
+    run of a permutation, so the tile issues at most one fixed-length
+    descriptor per selected emitter (``<= block + 1`` of them).  Runs
+    land in slot order in a scratch line; copies are issued in
+    ascending emitter order so a later run overwrites any earlier
+    run's fixed-length overhang — the slot's owner (the *last* emitter
+    with ``offs[e] <= t``) always writes last.  VMEM use is a constant
+    ``8·win + 2·block`` int32 lanes regardless of n + m, which is what
+    lifts the Pallas emit bound into the 1e7–1e8 region regime.  The
+    lazy ``MatchPlan.pairs()`` view over this kernel lives in
+    ``kernels.ops.CSRPairs``.
+
 Slot semantics match the XLA pass 2 bit-for-bit in both regimes: slot
 ``t`` belongs to the last emitter ``e`` with ``offs[e] <= t``; its rank
 is ``t − offs[e]``; ranks at or beyond the emitter's count (saturated
@@ -154,6 +177,55 @@ def _pad_lanes(x, fill, mult: int = 128):
     if pad:
         x = jnp.pad(x, (0, pad), constant_values=fill)
     return x.reshape(1, -1)
+
+
+def pack_emitter_tables(offs, counts, starts, *, n: int, m: int,
+                        min_len: int):
+    """Compact + pack pass 1's emitter tables (XLA side, traceable).
+
+    Zero-count emitters are dropped — they share their offset with a
+    successor, so the slot lookup (*last* emitter at ``offs <= t``)
+    never selects them — leaving compacted offsets strictly increasing
+    below saturation, which bounds one B-slot tile's reach to B + 1
+    consecutive entries.  Survivors pack into one (8, E_pad) int32
+    array: rows 0–3 are saturated offsets / counts / input starts /
+    original emitter id; rows 4–7 pad to the 8-sublane int32 tile
+    height so HBM window slices stay tile-aligned.  ``min_len`` floors
+    E_pad at the widest window a consumer will slice; pad entries
+    carry offset ``_PAD_OFF`` and emitter id n + m, so they can never
+    be selected by any in-range slot.
+    """
+    E = n + m
+    sel = jnp.nonzero(counts > 0, size=E, fill_value=E)[0].astype(jnp.int32)
+    ok = sel < E
+    selc = jnp.minimum(sel, E - 1)
+    c_offs = jnp.where(ok, offs[selc], _PAD_OFF)
+    c_counts = jnp.where(ok, counts[selc], 0)
+    c_starts = jnp.where(ok, starts[selc], 0)
+    c_eorig = jnp.where(ok, sel, E)
+
+    pad = max((-E) % 128, min_len - E)
+    if pad > 0:
+        c_offs = jnp.pad(c_offs, (0, pad), constant_values=_PAD_OFF)
+        c_counts = jnp.pad(c_counts, (0, pad))
+        c_starts = jnp.pad(c_starts, (0, pad))
+        c_eorig = jnp.pad(c_eorig, (0, pad), constant_values=E)
+    e_pad = c_offs.shape[0]
+    tab = jnp.zeros((8, e_pad), jnp.int32)
+    tab = tab.at[0].set(c_offs).at[1].set(c_counts)
+    tab = tab.at[2].set(c_starts).at[3].set(c_eorig)
+    return tab
+
+
+def pad_perm_for_runs(perm, run: int):
+    """Pad a sort permutation for fixed-``run``-length DMA over-reads.
+
+    The CSR decode kernel copies a static ``run`` lanes per selected
+    emitter starting at ``start + rank``; the clamp ``rank <= count``
+    keeps the copy start inside the real permutation, so ``run`` extra
+    lanes past the lane-padded end make every over-read in-bounds.
+    """
+    return _pad_lanes(jnp.pad(perm, (0, run)), 0)
 
 
 @functools.partial(jax.jit,
@@ -275,27 +347,9 @@ def twopass_emit_streaming(offs, counts, starts, perm_s, perm_u, *,
     total = max_pairs + t_pad
     nt = total // bl
 
-    # compact away zero-count emitters; keep the original id for the
-    # class split and the emitted pair half.
-    sel = jnp.nonzero(counts > 0, size=E, fill_value=E)[0].astype(jnp.int32)
-    ok = sel < E
-    selc = jnp.minimum(sel, E - 1)
-    c_offs = jnp.where(ok, offs[selc], _PAD_OFF)
-    c_counts = jnp.where(ok, counts[selc], 0)
-    c_starts = jnp.where(ok, starts[selc], 0)
-    c_eorig = jnp.where(ok, sel, E)
-
-    pad = max((-E) % 128, win - E)
-    if pad:
-        c_offs = jnp.pad(c_offs, (0, pad), constant_values=_PAD_OFF)
-        c_counts = jnp.pad(c_counts, (0, pad))
-        c_starts = jnp.pad(c_starts, (0, pad))
-        c_eorig = jnp.pad(c_eorig, (0, pad), constant_values=E)
-    e_pad = c_offs.shape[0]
-    # 8 sublanes (int32 tile height) so the DMA slice is tile-aligned
-    tab = jnp.zeros((8, e_pad), jnp.int32)
-    tab = tab.at[0].set(c_offs).at[1].set(c_counts)
-    tab = tab.at[2].set(c_starts).at[3].set(c_eorig)
+    tab = pack_emitter_tables(offs, counts, starts, n=n, m=m, min_len=win)
+    e_pad = tab.shape[1]
+    c_offs = tab[0]
 
     t0 = jnp.arange(nt, dtype=jnp.int32) * bl
     k0 = jnp.searchsorted(c_offs, t0, side="right").astype(jnp.int32) - 1
@@ -325,3 +379,155 @@ def twopass_emit_streaming(offs, counts, starts, perm_s, perm_u, *,
         interpret=interpret,
     )(base, tab, perm_s_p, perm_u_p)
     return jnp.stack([s_out[0, :max_pairs], u_out[0, :max_pairs]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CSR decode kernel — constant VMEM; permutation runs stream in by DMA
+# ---------------------------------------------------------------------------
+
+def _scalar_at(vec, idx):
+    """vec[idx] as a traced scalar (dynamic index into a loaded vector)."""
+    return jax.lax.dynamic_slice(vec, (idx,), (1,))[0]
+
+
+def _csr_decode_kernel(meta_ref, tab_ref, perm_s_ref, perm_u_ref,
+                       s_out_ref, u_out_ref, tab_win_ref, run_ref,
+                       sem_ref, *, n: int, m: int, block: int, win: int,
+                       run: int):
+    """Decode one tile of pair slots from the CSR form.
+
+    ``meta_ref`` (scalar prefetch): slot 0 is the decode window's first
+    global slot id ``w0`` (dynamic — one compile covers every window
+    offset of a given size), slots 1.. are each tile's 128-aligned base
+    into the packed table.  ``tab_ref`` / ``perm_s_ref`` / ``perm_u_ref``
+    stay in HBM (``ANY``); per tile the kernel copies one (8, win)
+    table window in, binary-searches the owning emitter per lane, then
+    issues one fixed-``run``-length DMA per selected emitter, landing
+    the permutation runs at slot-relative positions in the ``run_ref``
+    scratch line.  Copies go in ascending emitter order: slot ``p``'s
+    owner is the *last* emitter whose run covers ``p``, so its copy is
+    the final write there and any earlier run's overhang is dead.
+    """
+    i = pl.program_id(0)
+    tab_cp = pltpu.make_async_copy(
+        tab_ref.at[:, pl.ds(meta_ref[1 + i], win)],
+        tab_win_ref, sem_ref.at[0])
+    tab_cp.start()
+    tab_cp.wait()
+
+    window = tab_win_ref[...]         # (8, win) int32
+    offs_w = window[0, :]
+    t0 = meta_ref[0] + i * block
+    t = t0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0, :]
+    k = _search_last_le(offs_w, t, win)
+    j = t - jnp.take(offs_w, k)
+    cnt = jnp.take(window[1, :], k)
+    e = jnp.take(window[3, :], k)
+
+    # every lane's selection lies in [k_lo, k_hi]; the range is all
+    # real emitters (pads sit past every selectable entry), so the
+    # class split below never sees the n+m sentinel.
+    k_lo = jnp.min(k)
+    n_runs = jnp.max(k) - k_lo + 1
+
+    def copy_run(src_ref, src0, p0):
+        cp = pltpu.make_async_copy(
+            src_ref.at[0, pl.ds(src0, run)],
+            run_ref.at[0, pl.ds(p0, run)], sem_ref.at[1])
+        cp.start()
+        cp.wait()
+
+    def body(r, carry):
+        kk = k_lo + r
+        off_r = _scalar_at(offs_w, kk)
+        cnt_r = _scalar_at(window[1, :], kk)
+        start_r = _scalar_at(window[2, :], kk)
+        e_r = _scalar_at(window[3, :], kk)
+        # first rank this tile needs from emitter kk, clamped to its
+        # count: start + j0 <= start + count stays inside the real
+        # permutation (class A: aA + cnt_a = rank_hi <= m, and
+        # symmetrically for class B), so the fixed-length over-read
+        # lands in pad_perm_for_runs's tail padding.
+        j0 = jnp.clip(t0 - off_r, 0, cnt_r)
+        p0 = jnp.maximum(off_r - t0, 0)   # slot-relative landing spot
+        src0 = start_r + j0
+
+        @pl.when(e_r < n)
+        def _():
+            copy_run(perm_u_ref, src0, p0)
+
+        @pl.when(e_r >= n)
+        def _():
+            copy_run(perm_s_ref, src0, p0)
+
+        return carry
+
+    jax.lax.fori_loop(0, n_runs, body, 0)
+
+    v = run_ref[0, pl.ds(0, block)]
+    valid = (j >= 0) & (j < cnt)
+    is_a = e < n
+    s_out_ref[0, :] = jnp.where(valid, jnp.where(is_a, e, v), -1)
+    u_out_ref[0, :] = jnp.where(valid, jnp.where(is_a, v, e - n), -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "nslots", "block",
+                                    "interpret"))
+def csr_decode_window(tab, perm_s_pad, perm_u_pad, w0, *, n: int, m: int,
+                      nslots: int, block: int = DEF_BLOCK,
+                      interpret: bool = False):
+    """Decode ``nslots`` pair slots starting at dynamic slot ``w0``.
+
+    ``tab`` is the packed compacted emitter table from
+    ``pack_emitter_tables`` (built with ``min_len >=
+    stream_window(lane_pad(block))``), ``perm_s_pad`` / ``perm_u_pad``
+    the permutations padded by ``pad_perm_for_runs``.  Returns the
+    (nslots, 2) int32 slots ``[w0, w0 + nslots)`` of the dense pass-2
+    buffer, bit-identical to ``core.sbm._twopass_emit`` on that window
+    (slots at or past the emit capacity decode to the −1 pad — callers
+    must trim to the capacity themselves; see ``kernels.ops.CSRPairs``).
+    ``w0`` is a traced operand: decoding a different window of the same
+    size never retraces.
+    """
+    if nslots == 0:
+        return _empty_pairs()
+    e_pad = tab.shape[1]
+    bl = min(lane_pad(block), max(128, lane_pad(nslots)))
+    win = stream_window(bl)
+    run = bl
+    if e_pad < win:
+        raise ValueError(
+            f"packed table length {e_pad} is narrower than the decode "
+            f"window {win}; pack with min_len >= stream_window("
+            f"lane_pad(block)) (block={block})")
+    t_pad = (-nslots) % bl
+    total = nslots + t_pad
+    nt = total // bl
+
+    w0 = jnp.asarray(w0, jnp.int32)
+    t0s = w0 + jnp.arange(nt, dtype=jnp.int32) * bl
+    k0 = jnp.searchsorted(tab[0], t0s, side="right").astype(jnp.int32) - 1
+    base = (jnp.maximum(k0, 0) // 128) * 128
+    base = jnp.clip(base, 0, e_pad - win)
+    meta = jnp.concatenate([jnp.reshape(w0, (1,)), base])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)] * 3,
+        out_specs=(pl.BlockSpec((1, bl), lambda i, mref: (0, i)),
+                   pl.BlockSpec((1, bl), lambda i, mref: (0, i))),
+        scratch_shapes=[pltpu.VMEM((8, win), jnp.int32),
+                        pltpu.VMEM((1, bl + run), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    s_out, u_out = pl.pallas_call(
+        functools.partial(_csr_decode_kernel, n=n, m=m, block=bl,
+                          win=win, run=run),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((1, total), jnp.int32),
+                   jax.ShapeDtypeStruct((1, total), jnp.int32)),
+        interpret=interpret,
+    )(meta, tab, perm_s_pad, perm_u_pad)
+    return jnp.stack([s_out[0, :nslots], u_out[0, :nslots]], axis=1)

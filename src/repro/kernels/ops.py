@@ -112,11 +112,15 @@ def _twopass_tables(s_lo, s_hi, u_lo, u_hi, max_pairs):
 # tables VMEM-resident (shared by every grid step); past the byte budget
 # they cannot fit beside the output block on a real TPU core.  The
 # streaming kernel DMAs the offset/count/start tables per tile and only
-# keeps the two sort permutations resident, reaching ~4x further before
-# the bit-identical XLA pass 2 takes over.  Tests monkeypatch the budget
-# to exercise every route at small sizes.
+# keeps the two sort permutations resident, reaching ~4x further.  The
+# csr route keeps NOTHING resident — tables and permutation runs both
+# stream per tile, so its footprint is constant in n+m and the route's
+# reach is unbounded; it returns a lazy CSRPairs view instead of a
+# dense buffer, so the d>1 verify path (which needs dense candidates)
+# falls through to the bit-identical XLA pass 2 instead.  Tests
+# monkeypatch the budget to exercise every route at small sizes.
 _EMIT_VMEM_TABLE_BUDGET = 8 << 20
-EMIT_ROUTES = ("auto", "resident", "streaming", "xla")
+EMIT_ROUTES = ("auto", "resident", "streaming", "csr", "xla")
 
 # last route taken by twopass_pairs_pallas (None before any call /
 # after an empty-set short-circuit) — lets tests and benchmarks prove
@@ -137,23 +141,34 @@ def emit_route_bytes(n: int, m: int, *, block: int = emit_kernel.DEF_BLOCK
     ``streaming``: only the permutations are resident; the packed
     emitter table streams through a double-buffered 2 x (8, block+256)
     window.
+    ``csr``: nothing is resident — one (8, win) table window plus one
+    (1, 2·block) run-landing line per tile, both DMA-fed.  Constant in
+    n + m, so the csr need never exceeds any budget the other kernels
+    fit (the decode kernel's reach is bounded by int32 slot ids, not
+    by VMEM).
     """
     e = n + m
-    win = emit_kernel.stream_window(block)
+    bl = emit_kernel.lane_pad(block)
+    win = emit_kernel.stream_window(bl)
     return {
         "resident": 4 * (3 * (e + 1) + e),
         "streaming": 4 * e + 2 * 8 * win * 4,
+        "csr": 4 * (8 * win + 2 * bl),
     }
 
 
 def choose_emit_route(n: int, m: int, *,
                       block: int = emit_kernel.DEF_BLOCK,
-                      budget: int | None = None) -> str:
+                      budget: int | None = None,
+                      dense_only: bool = False) -> str:
     """Smallest-footprint emit route whose VMEM need fits ``budget``.
 
     Pure and deterministic: ``resident`` while all five tables fit,
-    then ``streaming`` while the permutations alone fit, else ``xla``.
-    ``budget=None`` reads the module default (monkeypatchable).
+    then ``streaming`` while the permutations alone fit, then ``csr``
+    (constant footprint, lazy decode view), else ``xla``.
+    ``dense_only=True`` skips ``csr`` for callers that need a dense
+    candidate buffer (the engine's d > 1 verify path).  ``budget=None``
+    reads the module default (monkeypatchable).
     """
     budget = _EMIT_VMEM_TABLE_BUDGET if budget is None else budget
     need = emit_route_bytes(n, m, block=block)
@@ -161,41 +176,210 @@ def choose_emit_route(n: int, m: int, *,
         return "resident"
     if need["streaming"] <= budget:
         return "streaming"
+    if not dense_only and need["csr"] <= budget:
+        return "csr"
     return "xla"
+
+
+class CSRPairs:
+    """Lazy pair view over the CSR emit form — decode windows on demand.
+
+    Behaves like the dense ``(cap, 2)`` int32 −1-padded pair buffer the
+    other routes return, but holds only pass 1's compressed tables on
+    device (packed compacted emitter table + the two padded sort
+    permutations: O(n+m) words, never O(K)).  ``decode(start, stop)``
+    materializes just that slot window through the constant-VMEM
+    ``kernels.emit.csr_decode_window`` kernel — bit-identical to the
+    dense buffer's same slice, including the −1 pad past the true
+    count.  Windows are padded up to a power of two before the kernel
+    call, so sweeping any cap costs O(lg cap) distinct compiles total;
+    the window *offset* is a traced scalar and never retraces.
+
+    ``np.asarray(view)`` / ``to_dense()`` materialize the full dense
+    buffer (assembled window-by-window on host for ``__array__``), so
+    every dense consumer — ``pairs_to_set``, ``validate_pairs``, the
+    parity suites — works unchanged; large-K callers should iterate
+    ``windows()`` instead and never hold the O(K) buffer.
+    """
+
+    def __init__(self, tab, perm_s_pad, perm_u_pad, *, n: int, m: int,
+                 cap: int, count: int,
+                 block: int = emit_kernel.DEF_BLOCK,
+                 interpret: bool = False):
+        self.tab = tab
+        self.perm_s_pad = perm_s_pad
+        self.perm_u_pad = perm_u_pad
+        self.n = int(n)
+        self.m = int(m)
+        self.cap = int(cap)
+        self.count = int(count)
+        self.block = int(block)
+        self.interpret = bool(interpret)
+
+    @classmethod
+    def empty(cls, cap: int, *, n: int = 0, m: int = 0,
+              block: int = emit_kernel.DEF_BLOCK,
+              interpret: bool = False) -> "CSRPairs":
+        """All-pad view (empty region sets / zero capacity)."""
+        return cls(None, None, None, n=n, m=m, cap=cap, count=0,
+                   block=block, interpret=interpret)
+
+    @property
+    def shape(self):
+        return (self.cap, 2)
+
+    @property
+    def dtype(self):
+        return np.int32
+
+    def __len__(self) -> int:
+        return self.cap
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes actually held (the compressed CSR form)."""
+        if self.tab is None:
+            return 0
+        return 4 * int(self.tab.size + self.perm_s_pad.size
+                       + self.perm_u_pad.size)
+
+    @property
+    def dense_nbytes(self) -> int:
+        """Bytes a dense (cap, 2) int32 buffer would occupy."""
+        return self.cap * 2 * 4
+
+    def decode(self, start: int = 0, stop: int | None = None):
+        """Dense int32 (stop−start, 2) slice of slots [start, stop).
+
+        Identical to ``dense_pairs[start:stop]`` of the other routes:
+        real pairs in slot order below the true count (clipped at
+        ``cap``), −1 pads above it.
+        """
+        stop = self.cap if stop is None else stop
+        if not 0 <= start <= stop <= self.cap:
+            raise ValueError(
+                f"decode window [{start}, {stop}) outside [0, {self.cap}]")
+        nreq = stop - start
+        if nreq == 0:
+            return emit_kernel._empty_pairs()
+        if self.tab is None:
+            return jnp.full((nreq, 2), -1, jnp.int32)
+        # pow2 ladder: O(lg cap) compiled window sizes per plan, and the
+        # dynamic start means re-decoding elsewhere never retraces.
+        nslots = max(128, 1 << (nreq - 1).bit_length())
+        out = emit_kernel.csr_decode_window(
+            self.tab, self.perm_s_pad, self.perm_u_pad,
+            jnp.int32(start), n=self.n, m=self.m, nslots=nslots,
+            block=self.block, interpret=self.interpret)
+        return out[:nreq]
+
+    def windows(self, chunk: int = 1 << 16):
+        """Yield ``(start, np.ndarray)`` dense chunks in slot order."""
+        for w0 in range(0, self.cap, chunk):
+            yield w0, np.asarray(self.decode(w0, min(w0 + chunk, self.cap)))
+
+    def to_dense(self):
+        """Full dense (cap, 2) device buffer (one decode call)."""
+        if self.cap == 0:
+            return emit_kernel._empty_pairs()
+        return self.decode(0, self.cap)
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.full((self.cap, 2), -1, np.int32)
+        for w0, w in self.windows():
+            out[w0:w0 + w.shape[0]] = w
+        return out if dtype is None else out.astype(dtype)
+
+    def __repr__(self) -> str:
+        return (f"CSRPairs(cap={self.cap}, count={self.count}, "
+                f"n={self.n}, m={self.m}, nbytes={self.nbytes}, "
+                f"dense_nbytes={self.dense_nbytes})")
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs", "block"))
+def _csr_tables(s_lo, s_hi, u_lo, u_hi, max_pairs, block):
+    """Pass 1 + CSR packing for the csr emit route (all XLA)."""
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_phase1(
+        s_lo, s_hi, u_lo, u_hi, max_pairs)
+    bl = emit_kernel.lane_pad(block)
+    tab = emit_kernel.pack_emitter_tables(
+        offs, counts, starts, n=n, m=m,
+        min_len=emit_kernel.stream_window(bl))
+    ps = emit_kernel.pad_perm_for_runs(perm_s, bl)
+    pu = emit_kernel.pad_perm_for_runs(perm_u, bl)
+    return tab, ps, pu, cnt_a, cnt_b
+
+
+def twopass_pairs_csr(S: Regions, U: Regions, max_pairs: int, *,
+                      block: int = emit_kernel.DEF_BLOCK,
+                      interpret: bool = False):
+    """CSR emit route: ``(CSRPairs view, exact count)``.
+
+    Same count/truncation contract as the dense routes, but the first
+    element is a lazy ``CSRPairs`` over the compressed form — the dense
+    ``(max_pairs, 2)`` buffer is never materialized here, which is what
+    keeps the quadratic-K path O(n+m) in device memory.
+    """
+    assert S.d == 1
+    if S.n == 0 or U.n == 0:
+        return CSRPairs.empty(max_pairs, n=S.n, m=U.n, block=block,
+                              interpret=interpret), 0
+    tab, ps, pu, cnt_a, cnt_b = _csr_tables(
+        S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], max_pairs, block)
+    count = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
+                + np.sum(np.asarray(cnt_b), dtype=np.int64))
+    view = CSRPairs(tab, ps, pu, n=S.n, m=U.n, cap=max_pairs,
+                    count=count, block=block, interpret=interpret)
+    return view, count
 
 
 def twopass_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
                          block: int = emit_kernel.DEF_BLOCK,
                          interpret: bool = False, route: str = "auto",
-                         budget: int | None = None):
+                         budget: int | None = None,
+                         dense_only: bool = False):
     """Exact 1-D pair enumeration, pass 2 fused into one Pallas kernel.
 
     Pass 1 (sort + searchsorted counts + saturated offset scan) stays on
     XLA; the slot→(emitter, rank) lookup and the pair write run as a
     ``kernels.emit`` Mosaic kernel.  Same contract as
-    ``core.sbm.sbm_pairs``: ``(pairs int32 (max_pairs, 2) −1-padded,
-    exact count)``, truncation reports the true K.
+    ``core.sbm.sbm_pairs``: ``(pairs, exact count)``, truncation
+    reports the true K.  ``pairs`` is a dense int32 (max_pairs, 2)
+    −1-padded buffer on the resident/streaming/xla routes and a lazy
+    ``CSRPairs`` view (identical decoded contents) on the csr route.
 
     ``route`` picks the emit regime: ``auto`` applies
-    ``choose_emit_route`` (resident tables → streamed tables → the
-    bit-identical XLA pass 2 as sizes grow past ``budget``); pinning
-    ``resident``/``streaming``/``xla`` bypasses the policy — all three
-    produce bit-identical output at any size that compiles, which is
-    what the parity tests pin them for.
+    ``choose_emit_route`` (resident tables → streamed tables → csr
+    decode view → the bit-identical XLA pass 2 as sizes grow past
+    ``budget``); pinning a route bypasses the policy — all four
+    produce bit-identical decoded output at any size that compiles,
+    which is what the parity tests pin them for.  ``dense_only=True``
+    excludes csr from ``auto`` and rejects a pinned ``csr`` (callers
+    that must gather from the candidate buffer, e.g. d > 1 verify).
     """
     global _LAST_EMIT_ROUTE
     assert S.d == 1
     if route not in EMIT_ROUTES:
         raise ValueError(f"route must be one of {EMIT_ROUTES}, got {route}")
+    if dense_only and route == "csr":
+        raise ValueError(
+            "emit_route='csr' returns a lazy CSRPairs view, but this "
+            "caller needs a dense candidate buffer (d > 1 verify path); "
+            "pin 'streaming'/'xla' or leave 'auto'")
     if S.n == 0 or U.n == 0:
         _LAST_EMIT_ROUTE = None
         return jnp.full((max_pairs, 2), -1, jnp.int32), 0
     if route == "auto":
-        route = choose_emit_route(S.n, U.n, block=block, budget=budget)
+        route = choose_emit_route(S.n, U.n, block=block, budget=budget,
+                                  dense_only=dense_only)
     _LAST_EMIT_ROUTE = route
     if route == "xla":
         from ..core.sbm import sbm_pairs
         return sbm_pairs(S, U, max_pairs)
+    if route == "csr":
+        return twopass_pairs_csr(S, U, max_pairs, block=block,
+                                 interpret=interpret)
     perm_s, perm_u, starts, counts, offs, cnt_a, cnt_b = _twopass_tables(
         S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0], max_pairs)
     emit = (emit_kernel.twopass_emit if route == "resident"

@@ -17,10 +17,18 @@ and the ``--smoke`` output are built from::
           "query_latency_us": {"count", "p50", "p99", "max", "mean"},
           "batch_occupancy":  {...},     # filled slots / max_batch
           "rebuild_lag_versions": {...}, # staleness at response time
-          "rebuild_duration_us": {...}
+          "rebuild_duration_us": {...},
+          "gauges": {"snapshot_version": .., "snapshot_regions": ..,
+                     "snapshot_bytes": ..}  # last published snapshot
         }
       }
     }
+
+Gauges are last-write-wins scalars (the rebuild worker sets them at
+every snapshot publish) — the memory-accounting companion to the CSR
+emit route: ``snapshot_bytes`` is the device+host footprint of the
+tenant's current ``DDMSnapshot``, so a fleet dashboard can watch
+serving memory the same way ``emit_route_bytes`` models kernel VMEM.
 """
 from __future__ import annotations
 
@@ -70,6 +78,7 @@ class TenantMetrics:
 
     def __init__(self):
         self.counters = {name: 0 for name in COUNTERS}
+        self.gauges: dict[str, float] = {}
         self.query_latency_us = Histogram()
         self.batch_occupancy = Histogram()
         self.rebuild_lag_versions = Histogram()
@@ -78,6 +87,7 @@ class TenantMetrics:
     def to_dict(self) -> dict:
         return {
             "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
             "query_latency_us": self.query_latency_us.summary(),
             "batch_occupancy": self.batch_occupancy.summary(),
             "rebuild_lag_versions": self.rebuild_lag_versions.summary(),
@@ -103,6 +113,12 @@ class Metrics:
         tm = self.tenant(tenant)
         with self._lock:
             tm.counters[counter] += by
+
+    def set_gauge(self, tenant: str, gauge: str, value: float) -> None:
+        """Last-write-wins scalar (snapshot version / regions / bytes)."""
+        tm = self.tenant(tenant)
+        with self._lock:
+            tm.gauges[gauge] = value
 
     def to_dict(self) -> dict:
         with self._lock:

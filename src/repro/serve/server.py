@@ -92,7 +92,15 @@ class DDMServer:
             self._tenants[name] = t
             self._order.append(name)
         self.metrics.tenant(name)
+        self._record_snapshot_gauges(name, t.live)
         return t
+
+    def _record_snapshot_gauges(self, name: str, snap) -> None:
+        """Memory/version accounting for the tenant's live snapshot."""
+        self.metrics.set_gauge(name, "snapshot_version", snap.version)
+        self.metrics.set_gauge(name, "snapshot_regions",
+                               snap.S.n + snap.U.n)
+        self.metrics.set_gauge(name, "snapshot_bytes", snap.nbytes)
 
     def tenant(self, name: str) -> Tenant:
         t = self._tenants.get(name)
@@ -228,6 +236,7 @@ class DDMServer:
             tm = self.metrics.tenant(name)
             self.metrics.bump(name, "rebuilds")
             tm.rebuild_duration_us.record(dt * 1e6)
+            self._record_snapshot_gauges(name, snap)
             return True
         return False
 

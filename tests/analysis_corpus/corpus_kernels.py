@@ -84,9 +84,11 @@ def _route_drift(report, target):
 
     def drifted(n, m, *, block=emit_kernel.DEF_BLOCK):
         e = n + m
-        win = emit_kernel.stream_window(block)
+        bl = emit_kernel.lane_pad(block)
+        win = emit_kernel.stream_window(bl)
         return {"resident": 4 * (3 * (e + 1) + e),
-                "streaming": 4 * e + 8 * win * 4}   # dropped the 2x
+                "streaming": 4 * e + 8 * win * 4,   # dropped the 2x
+                "csr": 4 * (8 * win + 2 * bl)}
 
     ops.emit_route_bytes = drifted
     try:

@@ -18,9 +18,21 @@ def _missing_empty_guard(report, target):
     lint_source(path.read_text(), path=str(path), report=report)
 
 
+def _trivial_module_docstring(report, target):
+    # linted under a virtual serve path: the docstring rule keys on the
+    # module's location, and this defect models a serve module shipped
+    # with a one-word docstring instead of its contract.
+    path = _DEFECTS / "bare_serve_module.py"
+    lint_source(path.read_text(),
+                path="src/repro/serve/bare_serve_module.py",
+                report=report)
+
+
 CASES = [
     dict(name="deprecated_shim_calls", pass_name="lint",
          code="L_DEPRECATED", audit=_deprecated_calls),
     dict(name="pallas_wrapper_missing_empty_guard", pass_name="lint",
          code="L_EMPTY_GUARD", audit=_missing_empty_guard),
+    dict(name="serve_module_trivial_docstring", pass_name="lint",
+         code="L_MODULE_DOCSTRING", audit=_trivial_module_docstring),
 ]

@@ -56,7 +56,7 @@ def test_kernel_matrix_and_route_parity_clean():
 
 def test_route_parity_detects_model_drift(monkeypatch):
     drifted = lambda n, m, block=512: {  # noqa: E731
-        "resident": 1, "streaming": 1}
+        "resident": 1, "streaming": 1, "csr": 1}
     monkeypatch.setattr(ops, "emit_route_bytes",
                         lambda n, m, *, block=512: drifted(n, m, block))
     report = Report()

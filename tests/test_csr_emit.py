@@ -1,0 +1,208 @@
+"""CSR emit route: decode edge cases, lazy-view contract, capacity
+policies over the compressed offset arrays, and parity-as-sets against
+the distributed backend.
+
+The dense-route parity matrix lives in test_emit_routing.py; this file
+exercises what is *new* about the csr route — the decode kernel's
+window semantics (any start offset, any size, −1 pads past the true
+count), the degenerate table shapes (K = 0, one emitter, all-overlap
+quadratic K), and the CSRPairs view's contract (windows(), __array__,
+compressed footprint, pairs_to_set streaming consumption).
+"""
+import numpy as np
+import pytest
+
+from repro.core import MatchSpec, build_plan, make_regions, paper_workload
+from repro.core.dd_match import pairs_to_set
+from repro.core.sbm import sbm_pairs
+from repro.kernels import ops
+
+from proputils import interval_cases
+
+
+def _csr(S, U, cap, **kw):
+    view, k = ops.twopass_pairs_csr(S, U, cap, interpret=True, **kw)
+    assert isinstance(view, ops.CSRPairs)
+    return view, k
+
+
+# ---------------------------------------------------------------------------
+# decode edge cases
+# ---------------------------------------------------------------------------
+
+def test_k_zero_decodes_all_pad():
+    """Non-empty sets, zero overlaps: every slot decodes to the pad."""
+    S = make_regions(np.zeros((16, 1)), np.full((16, 1), 0.5))
+    U = make_regions(np.full((8, 1), 100.0), np.full((8, 1), 101.0))
+    view, k = _csr(S, U, 512)
+    assert k == 0 and view.count == 0
+    assert (np.asarray(view) == -1).all()
+    assert view.shape == (512, 2)
+    assert pairs_to_set(view, U.n, S.n) == set()
+
+
+def test_single_emitter_run():
+    """One subscription overlapping many updates: one CSR run covers
+    the whole buffer, crossing several decode tiles."""
+    S = make_regions(np.zeros((1, 1)), np.ones((1, 1)))
+    u = np.linspace(0.1, 0.9, 700, dtype=np.float32)[:, None]
+    U = make_regions(u, u + 1e-3)
+    want_p, want_c = sbm_pairs(S, U, 1024)
+    view, k = _csr(S, U, 1024)
+    assert k == want_c == 700
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(want_p))
+
+
+def test_all_overlap_quadratic_k():
+    """All-overlap workload: K = n*m, the regime the CSR form exists
+    for — compressed bytes stay O(n+m) while the dense buffer is O(K)."""
+    n, m = 96, 80
+    S = make_regions(np.zeros((n, 1)), np.ones((n, 1)))
+    U = make_regions(np.zeros((m, 1)), np.ones((m, 1)))
+    cap = n * m
+    want_p, want_c = sbm_pairs(S, U, cap)
+    view, k = _csr(S, U, cap)
+    assert k == want_c == n * m
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(want_p))
+    assert pairs_to_set(view, m, n) == {s * m + u for s in range(n)
+                                       for u in range(m)}
+    assert view.nbytes < view.dense_nbytes
+
+
+def test_decode_window_slicing_parity():
+    """decode(a, b) == dense[a:b] for arbitrary (unaligned) windows,
+    across randomized workloads — the lazy view's core contract."""
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=6, d=1):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        _, k = sbm_pairs(S, U, 1)
+        cap = max(k + 130, 2 * k, 256)      # pad tail crosses tiles
+        want = np.asarray(sbm_pairs(S, U, cap)[0])
+        view, got_k = _csr(S, U, cap)
+        assert got_k == k, seed
+        windows = [(0, cap), (0, 1), (cap - 1, cap), (3, 131),
+                   (127, 129), (cap // 3, min(cap // 3 + 257, cap))]
+        for a, b in windows:
+            np.testing.assert_array_equal(
+                np.asarray(view.decode(a, b)), want[a:b],
+                err_msg=f"seed={seed} window=[{a},{b})")
+        # windows() reassembles the dense buffer exactly
+        chunks = list(view.windows(chunk=97))
+        assert chunks[0][0] == 0 and sum(c.shape[0] for _, c in chunks) \
+            == cap
+        np.testing.assert_array_equal(np.concatenate([c for _, c in
+                                                      chunks]), want)
+
+
+def test_decode_window_validation():
+    S, U = paper_workload(seed=5, n_total=64, alpha=1.0)
+    view, _ = _csr(S, U, 128)
+    with pytest.raises(ValueError, match="outside"):
+        view.decode(-1, 4)
+    with pytest.raises(ValueError, match="outside"):
+        view.decode(0, 129)
+    with pytest.raises(ValueError, match="outside"):
+        view.decode(10, 9)
+    assert view.decode(7, 7).shape == (0, 2)
+
+
+def test_truncation_pads_beyond_cap_are_trimmed():
+    """cap < K: the view reports the true K and its decoded buffer is
+    the same truncated prefix the dense routes emit."""
+    S, U = paper_workload(seed=7, n_total=400, alpha=2.0)
+    want_p, want_c = sbm_pairs(S, U, 100)
+    view, k = _csr(S, U, 100)
+    assert k == want_c > 100
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(want_p))
+    assert len(view) == 100
+
+
+# ---------------------------------------------------------------------------
+# engine capacity policies over the compressed offset arrays
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity", ["exact", "grow", "fixed"])
+def test_capacity_policies_on_csr_route(capacity):
+    S, U = paper_workload(seed=11, n_total=600, alpha=1.5)
+    want_p, want_c = sbm_pairs(S, U, 1 << 14)
+    kw = {"max_pairs": 8 if capacity == "grow" else
+          (1 << 14 if capacity == "fixed" else None)}
+    spec = MatchSpec(algo="sbm", backend="pallas", capacity=capacity,
+                     emit_route="csr", interpret=True, **kw)
+    plan = build_plan(spec, S.n, U.n, 1, key=("csr-cap", capacity))
+    pairs, k = plan.pairs(S, U)
+    assert k == want_c
+    assert ops.last_emit_route() == "csr"
+    assert isinstance(pairs, ops.CSRPairs)
+    if capacity == "grow":
+        # pow2 doubling resolved over the saturated offset arrays: the
+        # re-emit re-packs the tables at the doubled cap, no dense
+        # buffer in between
+        assert pairs.cap >= k and (pairs.cap & (pairs.cap - 1)) == 0
+    plan.validate_pairs(pairs, count=min(k, pairs.cap))
+    assert pairs_to_set(pairs, U.n, S.n) \
+        == pairs_to_set(np.asarray(want_p)[:pairs.cap], U.n, S.n)
+
+
+def test_grow_reemit_is_single_doubling():
+    """grow with a tiny floor re-emits exactly once (exact K known),
+    and both emits stay on the csr route."""
+    S, U = paper_workload(seed=13, n_total=512, alpha=1.0)
+    spec = MatchSpec(algo="sbm", backend="pallas", capacity="grow",
+                     max_pairs=4, emit_route="csr", interpret=True)
+    plan = build_plan(spec, S.n, U.n, 1, key=("csr-grow",))
+    pairs, k = plan.pairs(S, U)
+    assert k > 4 and pairs.cap >= k
+    assert ops.last_emit_route() == "csr"
+    # steady state: the memoized capacity serves without re-emitting
+    pairs2, k2 = plan.pairs(S, U)
+    assert k2 == k and pairs2.cap == pairs.cap
+
+
+# ---------------------------------------------------------------------------
+# parity-as-sets vs the distributed backend (the tentpole's cross-
+# backend acceptance: csr view == sharded emit == xla, as sets)
+# ---------------------------------------------------------------------------
+
+def test_csr_parity_as_sets_vs_distributed():
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=4, d=1):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        csr_plan = build_plan(
+            MatchSpec(algo="sbm", backend="pallas", emit_route="csr",
+                      capacity="exact", interpret=True),
+            S.n, U.n, 1, key=("csr-dist", "csr"))
+        dist_plan = build_plan(
+            MatchSpec(algo="sbm", backend="distributed",
+                      capacity="exact"),
+            S.n, U.n, 1, key=("csr-dist", "dist"))
+        vp, vk = csr_plan.pairs(S, U)
+        dp, dk = dist_plan.pairs(S, U)
+        assert vk == dk, seed
+        assert pairs_to_set(vp, U.n, S.n) == pairs_to_set(dp, U.n, S.n), \
+            seed
+
+
+# ---------------------------------------------------------------------------
+# view/accounting contract
+# ---------------------------------------------------------------------------
+
+def test_view_footprint_is_compressed():
+    """The device bytes a CSRPairs pins scale with n+m, not with cap —
+    the memory claim behind lifting the emit bound."""
+    S, U = paper_workload(seed=17, n_total=2048, alpha=1.0)
+    small, _ = _csr(S, U, 1 << 10)
+    huge, _ = _csr(S, U, 1 << 22)
+    assert huge.nbytes == small.nbytes          # cap-independent
+    assert huge.dense_nbytes == (1 << 22) * 8
+    assert huge.nbytes < huge.dense_nbytes
+
+
+def test_pairs_to_set_windows_validation_names_csr_window():
+    """The windowed pairs_to_set path still validates index ranges."""
+    S, U = paper_workload(seed=19, n_total=128, alpha=1.0)
+    view, k = _csr(S, U, 256)
+    assert k > 0
+    # lie about the update-set size: every real pair is now out of range
+    with pytest.raises(ValueError, match="CSR window"):
+        pairs_to_set(view, 1, S.n)

@@ -1,14 +1,15 @@
-"""Emit-route policy and cross-route parity (resident/streaming/XLA).
+"""Emit-route policy and cross-route parity (resident/streaming/csr/XLA).
 
-The three emit regimes must be bit-identical wherever they run — the
-route is a pure performance decision (``kernels.ops.choose_emit_route``
-byte-budget policy), never a semantic one.  These tests pin each route
-explicitly (so the kernel under test is the one that actually runs —
-``last_emit_route`` proves it), drive the router across both byte
-thresholds, and cross the *real* default thresholds with interpret-mode
-runs at n+m = 6e5 (past the old ~5.2e5 resident/VMEM fallback point)
-and 2e6 (the paper's benchmark regime, upper edge of the streaming
-route).
+The four emit regimes must be bit-identical on the pairs they decode —
+the route is a pure performance decision (``kernels.ops.choose_emit_route``
+byte-budget policy), never a semantic one (csr returns a lazy CSRPairs
+view; its decoded dense form is the bit-identical object).  These tests
+pin each route explicitly (so the kernel under test is the one that
+actually runs — ``last_emit_route`` proves it), drive the router across
+every byte threshold, and cross the *real* default thresholds with
+interpret-mode runs at n+m = 6e5 (past the old ~5.2e5 resident/VMEM
+fallback point), 2e6 (upper edge of the streaming route), and 2.2e6
+(the csr regime — past every dense Pallas route).
 """
 import numpy as np
 import pytest
@@ -38,11 +39,19 @@ def test_route_policy_thresholds_exact():
         == "resident"
     assert ops.choose_emit_route(n, m, budget=need["resident"] - 1) \
         == "streaming"
-    # streaming/xla boundary
+    assert need["csr"] == 4 * (8 * (DEF_BLOCK + 256) + 2 * DEF_BLOCK)
+    # streaming/csr boundary (csr is constant-footprint, so it backstops
+    # streaming at any size where the window alone fits)
     assert ops.choose_emit_route(n, m, budget=need["streaming"]) \
         == "streaming"
     assert ops.choose_emit_route(n, m, budget=need["streaming"] - 1) \
-        == "xla"
+        == "csr"
+    # csr/xla boundary
+    assert ops.choose_emit_route(n, m, budget=need["csr"]) == "csr"
+    assert ops.choose_emit_route(n, m, budget=need["csr"] - 1) == "xla"
+    # dense-only callers skip csr entirely
+    assert ops.choose_emit_route(n, m, budget=need["streaming"] - 1,
+                                 dense_only=True) == "xla"
 
 
 def test_route_policy_default_budget_regimes():
@@ -52,7 +61,12 @@ def test_route_policy_default_budget_regimes():
     assert ops.choose_emit_route(300_000, 300_000) == "streaming"  # 6e5
     assert ops.choose_emit_route(500_000, 500_000) == "streaming"  # 1e6
     assert ops.choose_emit_route(1_000_000, 1_000_000) == "streaming"
-    assert ops.choose_emit_route(1_100_000, 1_100_000) == "xla"  # 2.2e6
+    assert ops.choose_emit_route(1_100_000, 1_100_000) == "csr"  # 2.2e6
+    assert ops.choose_emit_route(5_000_000, 5_000_000) == "csr"  # 1e7
+    assert ops.choose_emit_route(50_000_000, 50_000_000) == "csr"  # 1e8
+    # without the lazy view the policy still falls back to XLA
+    assert ops.choose_emit_route(1_100_000, 1_100_000,
+                                 dense_only=True) == "xla"
 
 
 def test_route_rejects_unknown():
@@ -77,7 +91,7 @@ def test_pinned_routes_bitexact_property():
         _, k = sbm_pairs(S, U, 1)
         for cap in (max(k // 2, 1), k + 257):   # saturated / all-pad tail
             want_p, want_c = sbm_pairs(S, U, cap)
-            for route in ("resident", "streaming", "xla"):
+            for route in ("resident", "streaming", "csr", "xla"):
                 got_p, got_c = ops.twopass_pairs_pallas(
                     S, U, cap, interpret=True, route=route)
                 assert ops.last_emit_route() == route, (seed, cap)
@@ -101,7 +115,8 @@ def test_auto_route_follows_budget():
     want_p, want_c = sbm_pairs(S, U, 64)
     for budget, expect in ((need["resident"], "resident"),
                            (need["resident"] - 1, "streaming"),
-                           (need["streaming"] - 1, "xla")):
+                           (need["streaming"] - 1, "csr"),
+                           (need["csr"] - 1, "xla")):
         got_p, got_c = ops.twopass_pairs_pallas(
             S, U, 64, interpret=True, budget=budget)
         assert ops.last_emit_route() == expect, budget
@@ -113,12 +128,12 @@ def test_auto_route_follows_budget():
 def test_emit_empty_grid_and_empty_sets():
     """max_pairs == 0 short-circuits to (0, 2) before pallas_call."""
     S, U = paper_workload(seed=11, n_total=100, alpha=1.0)
-    for route in ("resident", "streaming", "xla"):
+    for route in ("resident", "streaming", "csr", "xla"):
         pairs, count = ops.twopass_pairs_pallas(S, U, 0, interpret=True,
                                                 route=route)
-        assert pairs.shape == (0, 2) and count > 0  # true K still exact
+        assert tuple(pairs.shape) == (0, 2) and count > 0  # K still exact
     empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
-    for route in ("resident", "streaming", "auto"):
+    for route in ("resident", "streaming", "csr", "auto"):
         pairs, count = ops.twopass_pairs_pallas(empty, U, 5,
                                                 interpret=True,
                                                 route=route)
@@ -135,7 +150,7 @@ def test_engine_route_pin_and_inspection():
     S, U = paper_workload(seed=13, n_total=1024, alpha=3.0)
     want = build_plan(MatchSpec(algo="sbm", capacity="exact"),
                       S.n, U.n, S.d).pairs(S, U)
-    for route in ("resident", "streaming", "xla"):
+    for route in ("resident", "streaming", "csr", "xla"):
         spec = MatchSpec(algo="sbm", backend="pallas", capacity="exact",
                          emit_route=route, interpret=True)
         plan = build_plan(spec, S.n, U.n, S.d)
@@ -200,10 +215,10 @@ def test_emit_route_bytes_monotone_in_problem_size():
     """Per route, modeled bytes never decrease as n+m grows — the
     policy's budget comparison is only sound against a monotone model."""
     for block in (DEF_BLOCK, 2048):
-        prev = {"resident": -1, "streaming": -1}
+        prev = {"resident": -1, "streaming": -1, "csr": -1}
         for n, m in sorted(_policy_sizes(), key=lambda t: t[0] + t[1]):
             need = ops.emit_route_bytes(n, m, block=block)
-            for route in ("resident", "streaming"):
+            for route in ("resident", "streaming", "csr"):
                 assert need[route] >= prev[route], \
                     (route, n, m, block, need, prev)
                 prev[route] = need[route]
@@ -223,9 +238,15 @@ def test_route_flip_exactly_at_budget_boundary_property():
                       <= need["resident"] - 1 else "xla"), (n, m)
         assert ops.choose_emit_route(n, m, budget=need["streaming"]) \
             in ("resident", "streaming")
-        assert ops.choose_emit_route(
-            n, m, budget=min(need["streaming"], need["resident"]) - 1) \
-            == "xla", (n, m)
+        below_dense = min(need["streaming"], need["resident"]) - 1
+        assert ops.choose_emit_route(n, m, budget=below_dense) \
+            == ("csr" if need["csr"] <= below_dense else "xla"), (n, m)
+        # csr is the last kernel route; below its constant need only
+        # the XLA fallback remains (and dense-only callers skip it)
+        assert ops.choose_emit_route(n, m, budget=need["csr"] - 1) \
+            in ("resident", "xla")
+        assert ops.choose_emit_route(n, m, budget=below_dense,
+                                     dense_only=True) == "xla", (n, m)
         assert ops.choose_emit_route(n, m, budget=0) == "xla"
 
 
@@ -236,12 +257,12 @@ def test_max_pairs_zero_builds_no_kernel_on_any_route():
     from repro.analysis import capture_pallas_calls
 
     S, U = paper_workload(seed=37, n_total=256, alpha=1.0)
-    for route in ("resident", "streaming", "xla", "auto"):
+    for route in ("resident", "streaming", "csr", "xla", "auto"):
         records = []
         with capture_pallas_calls(records):
             pairs, count = ops.twopass_pairs_pallas(
                 S, U, 0, interpret=True, route=route)
-        assert pairs.shape == (0, 2), route
+        assert tuple(pairs.shape) == (0, 2), route
         assert count > 0                     # the true K is still exact
         emit_calls = [r for r in records if "emit" in r.kernel_name]
         assert not emit_calls, (route, [r.kernel_name for r in records])
@@ -254,6 +275,7 @@ def test_max_pairs_zero_builds_no_kernel_on_any_route():
 @pytest.mark.parametrize("n_total,expect", [
     (500_000, "resident"),    # just under the old ~5.24e5 VMEM ceiling
     (600_000, "streaming"),   # past it: only the streaming kernel fits
+    (2_200_000, "csr"),       # past the dense routes: csr decode view
 ])
 def test_default_threshold_straddle_runs_pallas(n_total, expect):
     """Above the old fallback threshold the *streaming kernel* (not the

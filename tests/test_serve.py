@@ -424,11 +424,18 @@ def test_metrics_json_schema():
     server.query("a", "sub", np.float32([0.0]), np.float32([1e5]))
     rec = server.metrics_dict()
     tm = rec["tenants"]["a"]
-    assert set(tm) == {"counters", "query_latency_us", "batch_occupancy",
-                       "rebuild_lag_versions", "rebuild_duration_us"}
+    assert set(tm) == {"counters", "gauges", "query_latency_us",
+                       "batch_occupancy", "rebuild_lag_versions",
+                       "rebuild_duration_us"}
     for field in ("count", "p50", "p99", "max", "mean"):
         assert field in tm["query_latency_us"]
     assert tm["counters"]["completed"] == 1
+    # snapshot accounting gauges: set at registration, refreshed at
+    # every rebuild publish
+    assert set(tm["gauges"]) == {"snapshot_version", "snapshot_regions",
+                                 "snapshot_bytes"}
+    assert tm["gauges"]["snapshot_regions"] > 0
+    assert tm["gauges"]["snapshot_bytes"] > 0
     # and it round-trips as JSON
     import json
     assert json.loads(server.metrics_json()) == rec
