@@ -36,7 +36,7 @@ MODULES = [
 ]
 
 SMOKE_N = 2048
-SMOKE_ALGOS = ("bfm", "sbm", "itm")
+SMOKE_ALGOS = ("bfm", "sbm", "hsbm", "itm")
 
 
 def smoke() -> None:

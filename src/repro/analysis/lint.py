@@ -1,11 +1,13 @@
 """Pass 4 — repo AST lint: deprecation bans + kernel-wrapper contracts.
 
 ``L_DEPRECATED``
-    ``src/`` and ``benchmarks/`` must not call the deprecation shims
-    (``match_count`` / ``match_pairs`` / ``distributed_sbm_count``) —
-    internal code goes through the ``MatchSpec → build_plan`` engine.
-    The shims' own definition modules are exempt (they *are* the shims);
-    tests are deliberately out of scope (they pin the shims' behavior).
+    The pre-engine entry points (``match_count`` / ``match_pairs`` /
+    ``distributed_sbm_count``) finished their deprecation cycle and
+    were deleted — all code goes through the ``MatchSpec → build_plan``
+    engine.  ``src/`` and ``benchmarks/`` must neither *call* these
+    names nor *re-define* them (a reintroduced shim would silently
+    resurrect the old API); there are no exempt definition modules
+    anymore.  Tests are deliberately out of scope.
 
 ``L_EMPTY_GUARD``
     Any function that both takes a ``max_pairs`` argument and builds a
@@ -33,10 +35,6 @@ from .report import Report
 
 BANNED_CALLS = ("match_count", "match_pairs", "distributed_sbm_count")
 
-# the shims live here; their definitions (and the warnings they emit)
-# are the one allowed appearance.
-DEFINITION_MODULES = ("core/dd_match.py", "core/distributed.py")
-
 DEFAULT_ROOTS = ("src", "benchmarks")
 
 # subsystems whose modules must carry substantive docstrings (path
@@ -52,11 +50,6 @@ def _call_name(node: ast.Call) -> str | None:
     if isinstance(f, ast.Attribute):
         return f.attr
     return None
-
-
-def _is_definition_module(path: Path) -> bool:
-    s = str(path).replace("\\", "/")
-    return any(s.endswith(suffix) for suffix in DEFINITION_MODULES)
 
 
 def _has_max_pairs_arg(fn: ast.FunctionDef) -> bool:
@@ -110,16 +103,23 @@ def lint_source(src: str, *, path: str, report: Report) -> None:
                 f"{MIN_MODULE_DOCSTRING}) — serve/analysis modules "
                 "must state their contract and invariants up front")
 
-    if not _is_definition_module(Path(path)):
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Call):
-                name = _call_name(node)
-                if name in BANNED_CALLS:
-                    report.add(
-                        "lint", "L_DEPRECATED", f"{path}:{node.lineno}",
-                        f"call of deprecated shim '{name}' — build a "
-                        "MatchPlan instead: "
-                        "build_plan(MatchSpec(...), n_sub, n_upd, d)")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name in BANNED_CALLS:
+                report.add(
+                    "lint", "L_DEPRECATED", f"{path}:{node.lineno}",
+                    f"call of removed shim '{name}' — build a "
+                    "MatchPlan instead: "
+                    "build_plan(MatchSpec(...), n_sub, n_upd, d)")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in BANNED_CALLS:
+                report.add(
+                    "lint", "L_DEPRECATED", f"{path}:{node.lineno}",
+                    f"re-definition of removed shim '{node.name}' — the "
+                    "pre-engine entry points completed their "
+                    "deprecation cycle and must not be reintroduced "
+                    "(see docs/API.md migration table)")
 
     for node in ast.walk(tree):
         if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):

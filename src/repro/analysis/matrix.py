@@ -55,6 +55,7 @@ TARGETS = {
     "sbm": _SORT_TARGET,
     "sbm_chunked": _SORT_TARGET,
     "sbm_binary": _SORT_TARGET,
+    "hsbm": _SORT_TARGET,
     "itm": _SORT_TARGET,
 }
 
@@ -69,6 +70,8 @@ OUT_DTYPES = {
     "sbm_per_sub": (I32,),
     "cand_per_sub": (I32,),
     "twopass_emit": (I32, I32, I32),
+    "hsbm_tables": (I32, I32, I32, I32, I32),
+    "hsbm_emit": (I32, I32),
     "itm_counts": (I32,),
     "itm_flatten": (I32,),
     "itm_query_dd": (I32, I32),
@@ -202,6 +205,17 @@ def audit_ops_hotpaths(report: Report) -> None:
         ("ops._twopass_tables", ops._twopass_tables,
          (_f32(ns), _f32(ns), _f32(ms), _f32(ms)),
          dict(max_pairs=1 << 21), None),
+        # hybrid pass 1 at the same 1e6 regime: geometry statics match
+        # what hsbm_geometry measures for the uniform paper workload
+        # (ncells = pow2((n+m)/1280), ~64-granular per-cell caps)
+        ("ops._hsbm_tables", ops._hsbm_tables,
+         (_f32(ns), _f32(ns), _f32(ms), _f32(ms), _f32(), _f32()),
+         dict(ncells=2048, cap_s=640, suf_s=64, cap_u=640, suf_u=64,
+              max_pairs=1 << 21), (I32, I32, I32, I32, I32)),
+        ("ops._hsbm_csr_tables", ops._hsbm_csr_tables,
+         (_f32(nc), _f32(nc), _f32(mc), _f32(mc), _f32(), _f32()),
+         dict(ncells=8192, cap_s=768, suf_s=64, cap_u=768, suf_u=64,
+              max_pairs=1 << 21, block=512), None),
         ("ops._sweep", ops._sweep,
          (_f32(ns), _f32(ns), _f32(ms), _f32(ms)),
          dict(block=2048, interpret=True), (I32,)),
@@ -307,20 +321,25 @@ def audit_retrace_matrix(report: Report) -> None:
         query_factory, max_k=1 << 20,
         target="MatchPlan._resolve_query_cap[grow]", report=report)
 
-    # live steady state: the second identical call must not retrace
+    # live steady state: the second identical call must not retrace.
+    # hsbm re-measures its grid geometry per call on the host, so the
+    # probe additionally proves stable geometry ⇒ stable statics.
     S = probe_regions(PROBE["n"], seed=0)
     U = probe_regions(PROBE["m"], seed=1)
-    plan = MatchPlan(MatchSpec(algo="sbm", capacity="grow"), S.n, U.n, 1)
-    plan.count(S, U)
-    plan.pairs(S, U)
-    try:
-        with no_retrace(plan):
-            plan.count(S, U)
-            plan.pairs(S, U)
-    except RetraceError as e:
-        report.add("retrace", "R_STEADY_STATE",
-                   "sbm/xla/grow steady state", str(e))
-    report.note_audit("retrace", "steady-state no_retrace probe")
+    for algo in ("sbm", "hsbm"):
+        plan = MatchPlan(MatchSpec(algo=algo, capacity="grow"),
+                         S.n, U.n, 1)
+        plan.count(S, U)
+        plan.pairs(S, U)
+        try:
+            with no_retrace(plan):
+                plan.count(S, U)
+                plan.pairs(S, U)
+        except RetraceError as e:
+            report.add("retrace", "R_STEADY_STATE",
+                       f"{algo}/xla/grow steady state", str(e))
+    report.note_audit("retrace",
+                      "steady-state no_retrace probes (sbm, hsbm)")
 
 
 def run_all(*, root=None) -> Report:

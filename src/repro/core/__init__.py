@@ -1,16 +1,16 @@
 """Core DDM matching library (the paper's contribution, in JAX).
 
 One engine, many matchers: the paper's family of interchangeable DDM
-algorithms (BFM, GBM, parallel SBM, ITM) sits behind a single
-plan/compile/execute API —
+algorithms (BFM, GBM, parallel SBM, the grid+SBM hybrid, ITM) sits
+behind a single plan/compile/execute API —
 
     spec = MatchSpec(algo="sbm",        # bfm | gbm | sbm | sbm_chunked
-                                        # | sbm_binary | itm
+                                        # | sbm_binary | hsbm | itm
                      backend="xla",     # xla | pallas | distributed
                      capacity="exact")  # exact | fixed | grow
     plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
     k         = plan.count(S, U)        # exact K, int64-safe
-    pairs, k  = plan.pairs(S, U)        # −1-padded static buffer
+    res, k    = plan.pairs(S, U)        # PairsResult (−1-padded slots)
     mask      = plan.mask(S, U)         # (n, m) bool overlap mask
     ids, cnt  = plan.query(tree, opp, q_lo, q_hi)   # dynamic service
 
@@ -19,26 +19,34 @@ policy, tile/block sizes, mesh); ``build_plan`` memoizes compiled plans
 per problem shape, and a plan's executables are jit-cached so repeated
 calls never retrace (``plan.traces`` proves it).  Pair enumeration is
 the exact two-pass count-then-emit path — per-emitter counts,
-exclusive-scan offsets, parallel emit; under ``backend="pallas"`` the
-emit is one fused Mosaic kernel (``kernels.emit``), and under
-``backend="distributed"`` both the emit and the batched dynamic-service
-query are sharded over a device mesh (``core.distributed``) with
-set-identical results to the local backends.
+exclusive-scan offsets, parallel emit — with ``algo="hsbm"`` swapping
+pass 1's global sorts for coarse grid bucketing plus per-cell segmented
+sorts; ``pairs()`` always returns a ``core.pairs.PairsResult`` (dense
+wrapper or lazy CSR view, one consumer contract).  Under
+``backend="pallas"`` the emit is one fused Mosaic kernel
+(``kernels.emit``), and under ``backend="distributed"`` both the emit
+and the batched dynamic-service query are sharded over a device mesh
+(``core.distributed``) with set-identical results to the local
+backends.
 
 Public surface:
     MatchSpec / MatchPlan / build_plan (repro.core.engine)
+    PairsResult / DensePairs — the pair-enumeration result contract
     Regions, make_regions, paper_workload, koln_like_workload
     DDMService — dynamic d-dim regions (paper §3); batched
         ``update_regions`` churn runs through the same MatchPlan
-    match_count / match_pairs / distributed_sbm_count — deprecated
-        shims over the engine (see docs/API.md for the migration table)
-    block_mask, pairs_to_set — helpers (not deprecated)
+    block_mask, pairs_to_set — helpers
+
+The pre-engine entry points (``match_count`` / ``match_pairs`` /
+``distributed_sbm_count``) completed their deprecation cycle and are
+removed; docs/API.md keeps the migration table.
 """
 from .regions import (Regions, make_regions, paper_workload,
                       koln_like_workload, intersect_1d, intersect_dd)
 from .engine import (ALGOS, BACKENDS, CAPACITY_POLICIES, MatchPlan,
                      MatchSpec, build_plan)
-from .dd_match import match_count, match_pairs, block_mask, pairs_to_set
+from .pairs import DensePairs, PairsResult
+from .dd_match import block_mask, pairs_to_set
 from .dynamic import (DDMService, DDMSnapshot, StoreView,
                       describe_move_index_errors)
 from . import brute, grid, itm, sbm
@@ -48,7 +56,8 @@ __all__ = [
     "intersect_1d", "intersect_dd",
     "MatchSpec", "MatchPlan", "build_plan",
     "ALGOS", "BACKENDS", "CAPACITY_POLICIES",
-    "match_count", "match_pairs", "block_mask", "pairs_to_set",
+    "PairsResult", "DensePairs",
+    "block_mask", "pairs_to_set",
     "DDMService", "DDMSnapshot", "StoreView",
     "describe_move_index_errors", "brute", "grid", "itm", "sbm",
 ]

@@ -1,77 +1,29 @@
-"""Legacy DDM matching entry points — deprecation shims over the engine.
+"""DDM matching helpers shared across the engine's consumers.
 
-The d-dimensional matching implementation now lives in
+The d-dimensional matching implementation lives in
 ``repro.core.engine`` behind the plan/compile/execute API::
 
     spec = MatchSpec(algo="sbm", backend="xla", capacity="fixed",
                      max_pairs=cap)
     plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
-    pairs, k = plan.pairs(S, U)
+    res, k = plan.pairs(S, U)
 
-``match_count`` / ``match_pairs`` remain as thin shims (one
-``DeprecationWarning`` each, then a plan-cache hit) so examples and old
-benchmarks keep working mid-migration — see ``docs/API.md`` for the
-migration table.  ``block_mask`` and ``pairs_to_set`` are plain helpers,
-not deprecated.
+The pre-engine entry points (``match_count`` / ``match_pairs``) went
+through a deprecation cycle and are now removed — ``docs/API.md`` keeps
+the migration table.  What remains here are plain helpers:
+``block_mask`` (the sparse-attention planner primitive) and
+``pairs_to_set`` (validated host-side set assembly over any
+``core.pairs.PairsResult``).
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import ALGOS, MatchSpec, build_plan
-from .regions import Regions
+from .pairs import PairsResult
 
 Array = jax.Array
-
-_DEPRECATION = ("%s is deprecated; build a MatchPlan instead: "
-                "plan = build_plan(MatchSpec(algo=...), n_sub, n_upd, d); "
-                "see docs/API.md")
-
-
-def _legacy_spec(algo: str, max_pairs: int, kw: dict) -> MatchSpec:
-    if algo not in ALGOS:
-        raise ValueError(f"algo must be one of {ALGOS}")
-    fields = {}
-    for key in ("tile", "ncells", "p", "swap"):
-        if key in kw:
-            fields[key] = kw.pop(key)
-    if kw:
-        raise TypeError(f"unknown match kwargs: {sorted(kw)}")
-    return MatchSpec(algo=algo, backend="xla", capacity="fixed",
-                     max_pairs=max_pairs, **fields)
-
-
-def match_count(S: Regions, U: Regions, algo: str = "sbm", *,
-                max_pairs: int | None = None, **kw) -> int:
-    """Deprecated: use ``build_plan(spec, ...).count(S, U)``.
-
-    Total number of overlapping (subscription, update) pairs — always
-    exact; ``max_pairs`` never affects the result (kept for signature
-    compatibility).
-    """
-    warnings.warn(_DEPRECATION % "match_count", DeprecationWarning,
-                  stacklevel=2)
-    spec = _legacy_spec(algo, max_pairs or 1, dict(kw))
-    return build_plan(spec, S.n, U.n, S.d).count(S, U)
-
-
-def match_pairs(S: Regions, U: Regions, max_pairs: int,
-                algo: str = "sbm", **kw):
-    """Deprecated: use ``build_plan(spec, ...).pairs(S, U)``.
-
-    Enumerate overlapping pairs, each exactly once, into a −1-padded
-    ``(max_pairs, 2)`` buffer; ``count`` is the exact K (truncation is
-    the caller's overflow decision).  Identical semantics to the
-    engine's ``capacity="fixed"`` policy.
-    """
-    warnings.warn(_DEPRECATION % "match_pairs", DeprecationWarning,
-                  stacklevel=2)
-    spec = _legacy_spec(algo, max_pairs, dict(kw))
-    return build_plan(spec, S.n, U.n, S.d).pairs(S, U)
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +38,7 @@ def block_mask(q_lo: Array, q_hi: Array, kv_lo: Array, kv_hi: Array
                            kv_lo[None, :] < q_hi[:, None])
 
 
-def pairs_to_set(pairs: Array, m: int, n: int | None = None, *,
+def pairs_to_set(pairs, m: int, n: int | None = None, *,
                  context: object = None) -> set[int]:
     """Host-side helper: −1-padded (k, 2) pair buffer → ``{s*m + u}`` set.
 
@@ -98,23 +50,23 @@ def pairs_to_set(pairs: Array, m: int, n: int | None = None, *,
     ranges; pass ``context=plan`` (anything with a useful ``repr``) to
     have it appear in the message.
 
-    A lazy CSR view (``kernels.ops.CSRPairs``) is consumed window by
-    window — validation and set assembly run per chunk, so the dense
-    ``(cap, 2)`` buffer is never materialized even for quadratic-K
-    caps (duck-typed on ``windows()`` to keep core free of a kernels
-    import).
+    Any ``core.pairs.PairsResult`` — the ``DensePairs`` wrapper or a
+    lazy CSR view — is consumed window by window: validation and set
+    assembly run per chunk, so the dense ``(cap, 2)`` buffer is never
+    materialized even for quadratic-K caps.  Raw arrays still work via
+    ``np.asarray`` for callers holding pre-contract buffers.
     """
     from .engine import describe_pair_range_errors
 
-    out: set[int] = set()
-    if hasattr(pairs, "windows") and hasattr(pairs, "decode"):
+    if isinstance(pairs, PairsResult):
+        out: set[int] = set()
         for w0, arr in pairs.windows():
             problems = describe_pair_range_errors(arr, m, n)
             if problems:
                 ctx = (f"; context={context!r}" if context is not None
                        else "")
                 raise ValueError(
-                    "pair buffer index-range failure (CSR window at "
+                    "pair buffer index-range failure (window at "
                     f"slot {w0}): " + "; ".join(problems) + ctx)
             arr = arr[arr[:, 0] >= 0]
             out.update((arr[:, 0].astype(np.int64) * m

@@ -161,26 +161,6 @@ def _dist_count(v, is_lo, is_upd, valid, splitters, *, nshards: int,
     return f(v, is_lo, is_upd, valid, splitters)
 
 
-def distributed_sbm_count(S: Regions, U: Regions, mesh: Mesh | None = None,
-                          overprovision: float = 2.5) -> int:
-    """Deprecated: use the engine's ``distributed`` backend instead::
-
-        plan = build_plan(MatchSpec(algo="sbm", backend="distributed",
-                                    mesh=mesh), S.n, U.n, S.d)
-        k = plan.count(S, U)
-    """
-    import warnings
-
-    warnings.warn(
-        "distributed_sbm_count is deprecated; use "
-        "build_plan(MatchSpec(backend='distributed'), ...).count(S, U)",
-        DeprecationWarning, stacklevel=2)
-    from .engine import MatchSpec, build_plan
-    spec = MatchSpec(algo="sbm", backend="distributed", mesh=mesh,
-                     overprovision=overprovision)
-    return build_plan(spec, S.n, U.n, S.d).count(S, U)
-
-
 def _distributed_count(S: Regions, U: Regions, mesh: Mesh | None = None,
                        overprovision: float = 2.5) -> int:
     """Total K via multi-device parallel SBM (1-D regions).

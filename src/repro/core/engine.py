@@ -1,15 +1,21 @@
 """Unified MatchSpec → MatchPlan engine — one plan/compile/execute API.
 
 The paper's deliverable is a *family* of interchangeable DDM matchers
-(BFM, GBM, parallel SBM, ITM) evaluated under one harness; this module
-makes algorithm and backend choice a **config value** instead of five
-divergent call paths:
+(BFM, GBM, parallel SBM, the grid+SBM hybrid ``hsbm``, ITM) evaluated
+under one harness; this module makes algorithm and backend choice a
+**config value** instead of five divergent call paths:
 
     spec = MatchSpec(algo="sbm", backend="pallas", capacity="grow")
     plan = build_plan(spec, n_sub=S.n, n_upd=U.n, d=S.d)
     k = plan.count(S, U)
-    pairs, k = plan.pairs(S, U)          # −1-padded static buffer
+    res, k = plan.pairs(S, U)            # PairsResult (−1-padded slots)
     ids, cnt = plan.query(tree, opp, q_lo, q_hi)   # dynamic service path
+
+``pairs()`` always returns a ``core.pairs.PairsResult`` — a
+``DensePairs`` wrapper over the dense buffer on most paths, the lazy
+``kernels.ops.CSRPairs`` view on the pallas csr emit route — so
+consumers write one code path (``np.asarray`` or ``windows()``)
+regardless of algo × backend × route.
 
 A ``MatchSpec`` is a frozen, hashable description of *how* to match
 (algorithm, backend, capacity policy, tile/block sizes, mesh).
@@ -47,8 +53,8 @@ Capacity policies (static buffer sizing for ``pairs()``/``query()``)
 --------------------------------------------------------------------
 ``exact``  run the cheap counting pass first, size the buffer to exactly
            K.  Never truncates; retraces whenever K changes.
-``fixed``  caller-supplied ``max_pairs``; truncation reports the true K
-           (old ``match_pairs`` semantics).  Never retraces.
+``fixed``  caller-supplied ``max_pairs``; truncation reports the true K.
+           Never retraces.
 ``grow``   grow-by-doubling: power-of-two buffer, re-executed doubled on
            overflow and memoized, so steady-state churn reuses one
            compiled kernel and a stream of calls retraces O(lg max K)
@@ -65,13 +71,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import brute, grid, itm, sbm
+from .pairs import DensePairs, PairsResult
 from .regions import Regions
 
 Array = jax.Array
 
-ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
+ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "hsbm", "itm")
 BACKENDS = ("xla", "pallas", "distributed")
 CAPACITY_POLICIES = ("exact", "fixed", "grow")
+_HSBM_STATIC_ARGNAMES = ("ncells", "cap_s", "suf_s", "cap_u", "suf_u",
+                         "max_pairs")
 
 # Hook point for the static auditor (repro.analysis): when set, every
 # per-plan jitted executable is routed through the hook at creation time
@@ -99,9 +108,11 @@ class MatchSpec:
     algo: str = "sbm"
     backend: str = "xla"
     capacity: str = "exact"
+    d: int | None = None           # declared dimensionality (optional)
     max_pairs: int | None = None   # fixed cap / grow floor
     tile: int = 4096               # BFM xla U-tile
     ncells: int = 3000             # GBM grid cells
+    hsbm_ncells: int | None = None  # hsbm grid override (None=measured)
     p: int = 8                     # chunked-SBM segments
     swap: str = "auto"             # ITM build-side policy
     ts: int = 256                  # Pallas BFM tile sizes
@@ -130,6 +141,14 @@ class MatchSpec:
             raise ValueError(
                 "emit_route must be one of ('auto', 'resident', "
                 f"'streaming', 'csr', 'xla'), got {self.emit_route}")
+        if self.d is not None and self.d < 1:
+            raise ValueError(f"d must be >= 1, got {self.d}")
+        if self.emit_route == "csr" and self.d is not None and self.d > 1:
+            raise ValueError(
+                "emit_route='csr' returns a lazy CSRPairs view, but d > 1 "
+                "verification gathers from a dense dim-0 candidate "
+                "buffer; use emit_route='auto'/'streaming'/'xla' "
+                f"for d={self.d}")
 
 
 class MatchPlan:
@@ -143,6 +162,16 @@ class MatchPlan:
     def __init__(self, spec: MatchSpec, n_sub: int, n_upd: int, d: int):
         if d < 1:
             raise ValueError(f"d must be >= 1, got {d}")
+        if spec.d is not None and spec.d != d:
+            raise ValueError(
+                f"spec declares d={spec.d} but the plan is built for "
+                f"d={d}")
+        if spec.emit_route == "csr" and d > 1:
+            raise ValueError(
+                "emit_route='csr' returns a lazy CSRPairs view, but "
+                "d > 1 verification gathers from a dense dim-0 candidate "
+                "buffer; use emit_route='auto'/'streaming'/'xla' "
+                f"for d={d}")
         self.spec = spec
         self.n_sub = int(n_sub)
         self.n_upd = int(n_upd)
@@ -246,6 +275,8 @@ class MatchPlan:
     def _count_1d(self, S: Regions, U: Regions) -> int:
         spec = self.spec
         algo = spec.algo
+        if algo == "hsbm":
+            return self._count_hsbm(S, U)
         if spec.backend == "pallas" and algo in ("sbm", "sbm_chunked"):
             from ..kernels import ops
             return ops.sbm_count_pallas(S, U, block=spec.block,
@@ -274,6 +305,40 @@ class MatchPlan:
             return grid.gbm_count(S, U, ncells=spec.ncells)
         raise AssertionError(algo)
 
+    def _hsbm_geom(self, S0: Regions, U0: Regions):
+        """Measure (or override) the hybrid grid geometry for this call.
+
+        Host-side NumPy over the dim-0 coordinates; the measured statics
+        are rounded to coarse quanta (``grid.hsbm_geometry``), so
+        same-distribution churn maps to one geometry and the plan's
+        executables never retrace in steady state.
+        """
+        return grid.hsbm_geometry(S0.lo[:, 0], S0.hi[:, 0],
+                                  U0.lo[:, 0], U0.hi[:, 0],
+                                  ncells=self.spec.hsbm_ncells)
+
+    def _count_hsbm(self, S: Regions, U: Regions) -> int:
+        """Exact K from the hybrid pass 1 alone (no emission).
+
+        Pass 1's unclipped per-emitter counts sum to K in host int64 —
+        identical math on both backends; only the jit wrapper differs
+        (plan-counted for xla, the shared module executable for pallas
+        so the benchmark and the engine hit one compile cache).
+        """
+        spec = self.spec
+        S0, U0 = self._project(S), self._project(U)
+        g = self._hsbm_geom(S0, U0)
+        args = (S0.lo[:, 0], S0.hi[:, 0], U0.lo[:, 0], U0.hi[:, 0],
+                jnp.float32(g.lb), jnp.float32(g.width))
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            counts = ops._hsbm_tables(*args, max_pairs=1, **g.statics())[3]
+        else:
+            f = self._jitted("hsbm_tables", sbm._hsbm_phase1,
+                             static_argnames=_HSBM_STATIC_ARGNAMES)
+            counts = f(*args, max_pairs=1, **g.statics())[3]
+        return int(np.sum(np.asarray(counts), dtype=np.int64))
+
     def _count_distributed(self, S: Regions, U: Regions) -> int:
         spec = self.spec
         if spec.algo not in ("sbm", "sbm_chunked", "sbm_binary"):
@@ -286,27 +351,28 @@ class MatchPlan:
 
     # -- pair enumeration ---------------------------------------------------
     def pairs(self, S: Regions, U: Regions):
-        """Enumerate overlaps: ``(pairs int32 (cap, 2) −1-padded, count)``.
+        """Enumerate overlaps: ``(PairsResult, count)``.
 
-        ``cap`` is resolved by the capacity policy; ``count`` is always
-        the exact K (python int) even when a fixed buffer truncates.
-
-        On the pallas backend's ``csr`` emit route (chosen by the byte
-        policy past n+m ≈ 2e6, or pinned via ``MatchSpec.emit_route``)
-        the first element is a lazy ``kernels.ops.CSRPairs`` view
-        instead of a dense array: device memory stays O(n+m), and any
-        slot window decodes on demand (``view.decode(a, b)`` /
-        ``view.windows()``), bit-identical to the dense buffer's slice.
-        ``np.asarray(view)`` materializes the dense buffer for code
-        that needs it.  The capacity policies are unaffected — every
-        route reports exact K, and ``grow``/``exact`` re-emit over the
-        compressed offset arrays at the resolved capacity.
+        The first element is always a ``core.pairs.PairsResult`` with
+        capacity resolved by the plan's policy; ``count`` (also exposed
+        as ``result.count``) is the exact K (python int) even when a
+        fixed buffer truncates.  Dense-emitting paths return a
+        ``DensePairs`` wrapper (``np.asarray``/slicing behave exactly
+        like the raw buffer they used to return); the pallas backend's
+        ``csr`` emit route (chosen by the byte policy past n+m ≈ 2e6,
+        or pinned via ``MatchSpec.emit_route``) returns the lazy
+        ``kernels.ops.CSRPairs`` subclass — device memory stays
+        O(n+m), and any slot window decodes on demand
+        (``result.decode(a, b)`` / ``result.windows()``),
+        bit-identical to the dense buffer's slice.  The capacity
+        policies are unaffected — every route reports exact K, and
+        ``grow``/``exact`` re-emit at the resolved capacity.
         """
         self._check(S, U)
         spec = self.spec
         if S.n == 0 or U.n == 0:
             cap = self._resolve_cap(0)
-            return jnp.full((cap, 2), -1, jnp.int32), 0
+            return DensePairs(jnp.full((cap, 2), -1, jnp.int32), 0), 0
         if spec.capacity == "exact":
             # the counting pass runs only when no capacity is memoized
             # yet; steady-state calls emit directly (every path reports
@@ -318,9 +384,11 @@ class MatchPlan:
             if max(k, 1) != cap:
                 cap = self._resolve_cap(k)
                 pairs, k = self._pairs_impl(S, U, out_cap=cap)
-            return pairs, k
+            return self._wrap_pairs(pairs, k)
         if spec.capacity == "fixed":
-            return self._pairs_impl(S, U, out_cap=self._resolve_cap(0))
+            pairs, k = self._pairs_impl(S, U,
+                                        out_cap=self._resolve_cap(0))
+            return self._wrap_pairs(pairs, k)
         # grow-by-doubling: every path reports the exact K, so at most
         # one re-execution with the doubled (power-of-two) buffer.
         cap = self._resolve_cap(0)
@@ -328,7 +396,14 @@ class MatchPlan:
         if k > cap:
             cap = self._resolve_cap(k)
             pairs, k = self._pairs_impl(S, U, out_cap=cap)
-        return pairs, k
+        return self._wrap_pairs(pairs, k)
+
+    @staticmethod
+    def _wrap_pairs(pairs, k: int):
+        """Uniform ``(PairsResult, count)`` return for ``pairs()``."""
+        if isinstance(pairs, PairsResult):
+            return pairs, k
+        return DensePairs(pairs, k), k
 
     def _pairs_impl(self, S: Regions, U: Regions, out_cap: int):
         """(pairs, exact K) with a caller-resolved output capacity."""
@@ -342,6 +417,9 @@ class MatchPlan:
             return self._pairs_bfm(S, U, out_cap)
         if algo in ("sbm", "sbm_chunked", "sbm_binary"):
             cand, k = self._pairs_sbm_dim0(
+                S, U, out_cap if self.d == 1 else self._cand_bound(S, U))
+        elif algo == "hsbm":
+            cand, k = self._pairs_hsbm_dim0(
                 S, U, out_cap if self.d == 1 else self._cand_bound(S, U))
         elif algo == "itm":
             cand, k = self._pairs_itm_dim0(
@@ -382,16 +460,33 @@ class MatchPlan:
         values, the valid ranges, and this plan's ``repr()`` — the
         dynamic companion of the static auditor's index checks.  A pad
         row is all −1; any partially-padded row is also an error.
+
+        ``PairsResult`` inputs are consumed window-by-window through
+        the ``windows()`` contract, so a lazy CSR view is validated
+        without ever materializing the dense ``(cap, 2)`` buffer.
         """
-        arr = np.asarray(pairs)
-        problems = describe_pair_range_errors(arr, self.n_upd, self.n_sub)
-        if count is not None:
+        if isinstance(pairs, PairsResult):
+            problems: list[str] = []
+            non_pad = 0
+            cap = pairs.cap
+            for w0, win in pairs.windows():
+                errs = describe_pair_range_errors(win, self.n_upd,
+                                                  self.n_sub)
+                problems.extend(f"{e} [window at slot {w0}]"
+                                for e in errs)
+                non_pad += int(np.sum(win[:, 0] >= 0))
+        else:
+            arr = np.asarray(pairs)
+            problems = describe_pair_range_errors(arr, self.n_upd,
+                                                  self.n_sub)
             non_pad = int(np.sum(arr[:, 0] >= 0))
-            want = min(count, arr.shape[0])
+            cap = arr.shape[0]
+        if count is not None:
+            want = min(count, cap)
             if non_pad != want:
                 problems.append(
                     f"buffer holds {non_pad} non-pad rows but the "
-                    f"reported count is {count} (capacity {arr.shape[0]})")
+                    f"reported count is {count} (capacity {cap})")
         if problems:
             raise ValueError("invalid pair buffer: "
                              + "; ".join(problems) + f"; plan={self!r}")
@@ -405,14 +500,21 @@ class MatchPlan:
         for algorithms that do not reach the two-pass emit kernel.  For
         d > 1 plans ``auto`` never resolves to ``csr`` — the verify pass
         gathers from the dense dim-0 candidate buffer — and a pinned
-        ``csr`` raises inside ``pairs()``.
+        ``csr`` is rejected at spec/plan construction.  For
+        ``algo='hsbm'`` under ``auto`` the answer is ``None``: the
+        route depends on the *measured* grid geometry, not on (n, m)
+        alone — tests read ``kernels.ops.last_emit_route()`` after a
+        ``pairs()`` call instead.
         """
         spec = self.spec
         if (spec.backend != "pallas"
-                or spec.algo not in ("sbm", "sbm_chunked", "sbm_binary")):
+                or spec.algo not in ("sbm", "sbm_chunked", "sbm_binary",
+                                     "hsbm")):
             return None
         if spec.emit_route != "auto":
             return spec.emit_route
+        if spec.algo == "hsbm":
+            return None
         from ..kernels import ops
         return ops.choose_emit_route(self.n_sub, self.n_upd,
                                      block=spec.block,
@@ -435,6 +537,29 @@ class MatchPlan:
                                 U0.lo[:, 0], U0.hi[:, 0], max_pairs=cap)
         k = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
                 + np.sum(np.asarray(cnt_b), dtype=np.int64))
+        return pairs, k
+
+    def _pairs_hsbm_dim0(self, S: Regions, U: Regions, cap: int):
+        """Hybrid grid+SBM dim-0 enumeration (measured geometry)."""
+        spec = self.spec
+        S0, U0 = self._project(S), self._project(U)
+        if spec.backend == "pallas":
+            from ..kernels import ops
+            g = self._hsbm_geom(S0, U0)
+            return ops.hsbm_pairs_pallas(S0, U0, cap, geom=g,
+                                         block=spec.block,
+                                         interpret=spec.interpret,
+                                         route=spec.emit_route,
+                                         budget=spec.emit_budget,
+                                         dense_only=self.d > 1)
+        g = self._hsbm_geom(S0, U0)
+        f = self._jitted("hsbm_emit", sbm._hsbm_emit,
+                         static_argnames=_HSBM_STATIC_ARGNAMES)
+        pairs, counts = f(S0.lo[:, 0], S0.hi[:, 0], U0.lo[:, 0],
+                          U0.hi[:, 0], jnp.float32(g.lb),
+                          jnp.float32(g.width), max_pairs=cap,
+                          **g.statics())
+        k = int(np.sum(np.asarray(counts), dtype=np.int64))
         return pairs, k
 
     def _pairs_itm_dim0(self, S: Regions, U: Regions, cap: int):

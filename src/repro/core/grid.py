@@ -124,6 +124,143 @@ def _capacities(lo, hi, lb, width, ncells):
     return span, max(int(occ.max()), 1)
 
 
+# ---------------------------------------------------------------------------
+# Hybrid grid+SBM (hsbm) geometry — host-side measurement
+# ---------------------------------------------------------------------------
+#
+# The hybrid algorithm replaces flat SBM's pass-1 *global* lo-sorts with a
+# coarse grid bucketing followed by per-cell segmented sorts: O(n lg n)
+# drops to O(n lg(n/ncells)) comparisons and, more importantly on wide
+# machines, every cell sorts a short padded row independently.  The grid
+# here is only a pre-filter — matching within/across cell boundaries stays
+# the exact SBM searchsorted-range argument, so hsbm inherits SBM's
+# exactness rather than GBM's first-overlapped-cell dedup discipline.
+#
+# Everything static about the computation (cell count, per-cell capacity,
+# boundary-suffix width) is measured on the host from the actual data,
+# then rounded to coarse quanta so repeated builds over same-distribution
+# data reuse the jit cache (zero steady-state retrace).
+
+_HSBM_TARGET_OCC = 1280     # aim for ~this many regions per cell pair
+_HSBM_MAX_NCELLS = 1 << 16
+
+
+@jax.tree_util.register_static
+class HsbmGeometry:
+    """Static grid geometry for the hybrid grid+SBM pass 1.
+
+    ``ncells``/``cap_s``/``cap_u``/``suf_s``/``suf_u`` are static shape
+    parameters (python ints); ``lb``/``width`` are the grid origin and
+    cell width (python floats, passed to kernels as traced f32 scalars so
+    value changes never retrace).
+    """
+
+    def __init__(self, ncells: int, cap_s: int, suf_s: int, cap_u: int,
+                 suf_u: int, lb: float, width: float):
+        self.ncells = int(ncells)
+        self.cap_s = int(cap_s)
+        self.suf_s = int(suf_s)
+        self.cap_u = int(cap_u)
+        self.suf_u = int(suf_u)
+        self.lb = float(lb)
+        self.width = float(width)
+
+    @property
+    def n_emit_s(self) -> int:
+        """Rows of the padded S emitter table (natives + spill suffix)."""
+        return self.ncells * (self.cap_s + self.suf_s)
+
+    @property
+    def n_emit_u(self) -> int:
+        return self.ncells * (self.cap_u + self.suf_u)
+
+    def statics(self) -> dict:
+        return dict(ncells=self.ncells, cap_s=self.cap_s, suf_s=self.suf_s,
+                    cap_u=self.cap_u, suf_u=self.suf_u)
+
+    def _key(self):
+        return (self.ncells, self.cap_s, self.suf_s, self.cap_u,
+                self.suf_u, self.lb, self.width)
+
+    def __eq__(self, other):
+        return (isinstance(other, HsbmGeometry)
+                and self._key() == other._key())
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __repr__(self):
+        return (f"HsbmGeometry(ncells={self.ncells}, cap_s={self.cap_s}, "
+                f"suf_s={self.suf_s}, cap_u={self.cap_u}, "
+                f"suf_u={self.suf_u}, lb={self.lb}, width={self.width})")
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def hsbm_geometry(s_lo, s_hi, u_lo, u_hi,
+                  ncells: int | None = None) -> HsbmGeometry:
+    """Measure the hybrid grid geometry on the host (pure NumPy).
+
+    ``ncells=None`` picks pow2_ceil((n+m)/1280) cells — the measured
+    sweet spot on the reference workloads — clamped so each cell is at
+    least one max-region-length wide (then a region's lo-cell and the
+    cell left of it are the only cells whose natives can reach it, which
+    the boundary-suffix construction in ``sbm._hsbm_side_tables``
+    relies on).  Per-cell native capacity is measured with the *exact*
+    float32 arithmetic the device uses (bitwise-identical cell
+    assignment); the spill-suffix width is measured conservatively in
+    float64 so rounding can only widen the suffix, never miss a
+    boundary-crossing region.
+    """
+    s_lo = np.asarray(s_lo, np.float32)
+    s_hi = np.asarray(s_hi, np.float32)
+    u_lo = np.asarray(u_lo, np.float32)
+    u_hi = np.asarray(u_hi, np.float32)
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    lb = float(min(s_lo.min(), u_lo.min()))
+    top = float(max(s_hi.max(), u_hi.max()))
+    max_len64 = float(max((s_hi.astype(np.float64) - s_lo).max(),
+                          (u_hi.astype(np.float64) - u_lo).max()))
+    if ncells is None:
+        ncells = _pow2_ceil(max(1, (n + m) // _HSBM_TARGET_OCC))
+    span_bound = (max(1, int((top - lb) / max_len64))
+                  if max_len64 > 0 and top > lb else 1)
+    nc = max(1, min(int(ncells), span_bound, _HSBM_MAX_NCELLS))
+    slack = max(abs(lb), abs(top)) * 2.0 ** -20 + 1e-300
+
+    def one_side(lo, width):
+        c = np.floor((lo - np.float32(lb)) / np.float32(width))
+        c = np.minimum(c.astype(np.int64), nc - 1)
+        occ = np.bincount(c, minlength=nc)
+        cap = max(64, -(-int(occ.max()) // 64) * 64)
+        # a region native to cell c−1 can reach cell c iff
+        # lo ≥ cell_c_left_edge − max_len; measure how many sit in that
+        # suffix window per cell, with f64 slack so the threshold is
+        # conservative under f32 rounding
+        thresh = (lb + (c + 1) * width) - max_len64 - slack
+        sufc = np.bincount(c[lo.astype(np.float64) >= thresh], minlength=nc)
+        suf = max(8, -(-int(sufc.max()) // 8) * 8)
+        return cap, suf
+
+    while True:
+        # the (1 + 1e-6) guard keeps floor((top − lb)/width) ≤ nc even
+        # after the division is redone in f32 on the device
+        width = (top - lb) / nc * (1 + 1e-6) if top > lb else 1.0
+        cap_s, suf_s = one_side(s_lo, width)
+        cap_u, suf_u = one_side(u_lo, width)
+        rows = nc * (cap_s + suf_s + cap_u + suf_u)
+        # padded-table blow-up guard: on skewed data per-cell max
+        # occupancy times ncells can dwarf n+m; halve the grid until the
+        # emitter tables stay within 4x the input (also keeps every
+        # shifted emitter id comfortably inside int32)
+        if nc == 1 or rows <= max(4 * (n + m), 1 << 16):
+            break
+        nc //= 2
+    return HsbmGeometry(nc, cap_s, suf_s, cap_u, suf_u, lb, width)
+
+
 def gbm_count(S: Regions, U: Regions, ncells: int = 3000,
               chunk: int | None = None) -> int:
     """Total K via grid matching.  ``ncells`` is the paper's tuning knob."""

@@ -1,0 +1,129 @@
+"""One result contract for pair enumeration — ``PairsResult``.
+
+``MatchPlan.pairs()`` historically returned either a dense ``(cap, 2)``
+int32 −1-padded device array or (on the CSR emit route) a duck-typed
+lazy view.  Every consumer had to know which one it got.  This module
+defines the single contract both shapes implement:
+
+* ``count`` — the exact total K (python int), even when the buffer
+  capacity truncates;
+* ``cap`` / ``shape`` / ``dtype`` / ``__len__`` — the static buffer
+  geometry (``(cap, 2)`` int32);
+* ``decode(start, stop)`` — the dense slice of slots ``[start, stop)``,
+  bit-identical across implementations: real pairs in slot order below
+  ``min(count, cap)``, −1 pads above it;
+* ``windows(chunk)`` — ``(start, np.ndarray)`` chunks in slot order,
+  the streaming consumption path that never materializes O(cap) at
+  once;
+* ``to_dense()`` — the full dense device buffer;
+* ``__array__`` — the full dense host buffer (NumPy protocol), so
+  ``np.asarray(result)`` works everywhere a raw buffer used to;
+* ``nbytes`` — device bytes actually held (the compressed form for a
+  lazy view, the buffer itself for a dense one).
+
+``DensePairs`` is the thin wrapper over an in-memory dense buffer;
+``kernels.ops.CSRPairs`` subclasses ``PairsResult`` for the lazy CSR
+decode view.  ``dd_match.pairs_to_set`` and
+``MatchPlan.validate_pairs`` consume any ``PairsResult`` window by
+window.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PairsResult:
+    """Abstract pair-enumeration result (see module docstring).
+
+    Subclasses must set ``cap`` and ``count`` (ints) and implement
+    ``decode`` and ``nbytes``; everything else derives from those.
+    """
+
+    cap: int
+    count: int
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.cap, 2)
+
+    @property
+    def dtype(self):
+        return np.int32
+
+    def __len__(self) -> int:
+        return self.cap
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes actually held by this result."""
+        raise NotImplementedError
+
+    @property
+    def dense_nbytes(self) -> int:
+        """Bytes a dense (cap, 2) int32 buffer would occupy."""
+        return self.cap * 2 * 4
+
+    def _check_window(self, start: int, stop: int | None) -> int:
+        stop = self.cap if stop is None else stop
+        if not 0 <= start <= stop <= self.cap:
+            raise ValueError(
+                f"decode window [{start}, {stop}) outside [0, {self.cap}]")
+        return stop
+
+    def decode(self, start: int = 0, stop: int | None = None):
+        """Dense int32 (stop−start, 2) device slice of slots
+        [start, stop) — real pairs below ``min(count, cap)``, −1 pads
+        above, identically across every implementation."""
+        raise NotImplementedError
+
+    def windows(self, chunk: int = 1 << 16):
+        """Yield ``(start, np.ndarray)`` dense chunks in slot order."""
+        for w0 in range(0, self.cap, chunk):
+            yield w0, np.asarray(self.decode(w0, min(w0 + chunk,
+                                                     self.cap)))
+
+    def to_dense(self):
+        """Full dense (cap, 2) device buffer."""
+        return self.decode(0, self.cap)
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.full((self.cap, 2), -1, np.int32)
+        for w0, w in self.windows():
+            out[w0:w0 + w.shape[0]] = w
+        return out if dtype is None else out.astype(dtype)
+
+
+class DensePairs(PairsResult):
+    """``PairsResult`` over an in-memory dense ``(cap, 2)`` buffer.
+
+    ``data`` is the device (or host) int32 −1-padded buffer the
+    resident/streaming/xla emit routes produce; ``count`` is the exact
+    K.  ``decode`` is a plain slice (no kernel round-trip) and
+    ``__getitem__`` delegates to the underlying buffer, so existing
+    array-style consumers (``pairs[k:]``, ``np.asarray(pairs)``) keep
+    working unchanged.
+    """
+
+    def __init__(self, data, count: int):
+        self.data = data
+        self.cap = int(data.shape[0])
+        self.count = int(count)
+
+    @property
+    def nbytes(self) -> int:
+        return self.cap * 2 * 4
+
+    def decode(self, start: int = 0, stop: int | None = None):
+        stop = self._check_window(start, stop)
+        return self.data[start:stop]
+
+    def __getitem__(self, idx):
+        return self.data[idx]
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.asarray(self.data)
+        return out if dtype is None else out.astype(dtype)
+
+    def __repr__(self) -> str:
+        return (f"DensePairs(cap={self.cap}, count={self.count}, "
+                f"nbytes={self.nbytes})")

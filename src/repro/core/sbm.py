@@ -89,7 +89,7 @@ def sbm_count_sweep(S: Regions, U: Regions) -> int:
     """Total K by the sweep-as-prefix-sum formulation (d-dim: see dd_match).
 
     d must be 1 here; multi-d composition needs pair identities and lives
-    in ``dd_match.match_count``.
+    in the engine's match-then-verify path (``engine.MatchPlan``).
     """
     assert S.d == 1, "sbm_count_sweep is the 1-D primitive (see dd_match)"
     c = _sweep_contribs(S.lo[:, 0], S.hi[:, 0], U.lo[:, 0], U.hi[:, 0])
@@ -254,6 +254,193 @@ def _twopass_emit(s_lo, s_hi, u_lo, u_hi, max_pairs: int):
     u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, e_b), -1)
     pairs = jnp.stack([s_idx, u_idx], axis=1).astype(jnp.int32)
     return pairs, cnt_a, cnt_b
+
+
+# ---------------------------------------------------------------------------
+# Hybrid grid+SBM (hsbm) — bucketed pass 1, exact per-cell SBM ranges
+# ---------------------------------------------------------------------------
+#
+# Flat two-pass SBM spends most of pass 1 in two global O(n lg n) lo-sorts.
+# The hybrid replaces them with (per side) ONE unstable radix-friendly sort
+# on sortable-bit int32 keys, then *contiguous gathers* into an
+# (ncells, cap) padded per-cell table — cells are monotone in sorted lo, so
+# per-cell segments are contiguous runs, no scatter and no second sort.
+# Matching stays exact SBM, localized:
+#
+#   * every overlap class-A/B range argument from the flat two-pass holds
+#     within a cell, because with cell width ≥ max region length a pair's
+#     max(lo) cell is either the partner's own cell or the one right of it;
+#   * each cell's emitter table is [natives | boundary suffix]: the suffix
+#     replicates the tail of cell c−1 whose regions can reach into cell c
+#     (measured conservatively on the host, see ``grid.hsbm_geometry``).
+#     A pair is counted where the *partner* is native — exactly once —
+#     so generous suffixes can never double-count.
+#
+# Per-emitter counts then feed the *same* exclusive-offset → emit machinery
+# as the flat path: the saturating scan, the XLA slot loop below, and all
+# Pallas emit routes (resident / streaming / CSR) in ``kernels``.
+
+_I32_MAX = jnp.int32(2 ** 31 - 1)
+
+
+def _sortable_bits(x):
+    """Monotone float32 → int32 bijection (IEEE-754 total order trick)."""
+    b = x.view(jnp.int32)
+    return jnp.where(b < 0, jnp.int32(-2147483648) - b, b)
+
+
+def _hsbm_side_tables(lo, hi, lb, width, ncells: int, cap: int, suf: int):
+    """Bucket one side into per-cell sorted tables.
+
+    Returns ``(nat_bits, emit_bits, emit_ids)``: ``nat_bits`` is the
+    (ncells, cap) sortable-bits lo table of cell natives (pads sort to the
+    row end as INT32_MAX); ``emit_bits``/``emit_ids`` append the ``suf``
+    boundary-suffix columns replicated from the tail of the previous cell
+    (ids are original region indices, −1 pads).
+    """
+    n = lo.shape[0]
+    key, perm = jax.lax.sort(
+        (_sortable_bits(lo), jnp.arange(n, dtype=jnp.int32)),
+        num_keys=1, is_stable=False)
+    lo_sorted = jnp.take(lo, perm)
+    cells = jnp.clip(jnp.floor((lo_sorted - lb) / width).astype(jnp.int32),
+                     0, ncells - 1)
+    # cells is monotone in sorted lo ⇒ per-cell runs are contiguous
+    starts = jnp.searchsorted(cells, jnp.arange(ncells, dtype=jnp.int32),
+                              side="left").astype(jnp.int32)
+    occ = jnp.append(starts[1:], jnp.int32(n)) - starts
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    idx = starts[:, None] + j
+    nat_valid = j < occ[:, None]
+    gi = jnp.clip(idx, 0, n - 1)
+    nat_bits = jnp.where(nat_valid, jnp.take(key, gi), _I32_MAX)
+    nat_ids = jnp.where(nat_valid, jnp.take(perm, gi), -1)
+    # boundary suffix: last `suf` natives of cell c−1 (cell 0 has none)
+    k = jnp.arange(suf, dtype=jnp.int32)[None, :]
+    pocc = jnp.roll(occ, 1).at[0].set(0)
+    pstart = jnp.roll(starts, 1).at[0].set(0)
+    sidx = pstart[:, None] + pocc[:, None] - suf + k
+    s_exists = ((pocc[:, None] - suf + k >= 0)
+                & (jnp.arange(ncells)[:, None] > 0))
+    sgi = jnp.clip(sidx, 0, n - 1)
+    sp_bits = jnp.where(s_exists, jnp.take(key, sgi), _I32_MAX)
+    sp_ids = jnp.where(s_exists, jnp.take(perm, sgi), -1)
+    emit_bits = jnp.concatenate([nat_bits, sp_bits], axis=1)
+    emit_ids = jnp.concatenate([nat_ids, sp_ids], axis=1)
+    return nat_bits, emit_bits, emit_ids
+
+
+def _hsbm_phase1(s_lo, s_hi, u_lo, u_hi, lb, width, *, ncells: int,
+                 cap_s: int, suf_s: int, cap_u: int, suf_u: int,
+                 max_pairs: int):
+    """Hybrid pass 1: per-emitter counts and slot offsets.
+
+    Emitters are the flattened per-cell tables, S side first:
+    ``n_emit_s = ncells·(cap_s+suf_s)`` class-A emitters (each S emitter
+    scans a window of its cell's U *natives*), then ``n_emit_u`` class-B
+    emitters (window of S natives, strict-stab ranges).  Returns
+    ``(sid, uid, starts, counts, offs)`` where ``sid``/``uid`` map
+    emitter rows back to original region indices (−1 pads), ``starts``
+    holds globalized window starts into the opposite side's emitter-table
+    flat index space, and ``offs`` is the saturating exclusive scan —
+    the same contract the flat ``_twopass_phase1`` feeds to pass 2.
+    """
+    n, m = s_lo.shape[0], u_lo.shape[0]
+    s_nat_bits, s_emit_bits, s_emit_ids = _hsbm_side_tables(
+        s_lo, s_hi, lb, width, ncells, cap_s, suf_s)
+    u_nat_bits, u_emit_bits, u_emit_ids = _hsbm_side_tables(
+        u_lo, u_hi, lb, width, ncells, cap_u, suf_u)
+    ss_l = jax.vmap(partial(jnp.searchsorted, side="left"))
+    ss_r = jax.vmap(partial(jnp.searchsorted, side="right"))
+
+    # class A: u.lo ∈ [s.lo, s.hi) — window of U natives per S emitter
+    s_emit_hi = jnp.where(
+        s_emit_ids >= 0,
+        jnp.take(s_hi, jnp.clip(s_emit_ids, 0, n - 1)), jnp.inf)
+    aA = ss_l(u_nat_bits, s_emit_bits).astype(jnp.int32)
+    rA = ss_l(u_nat_bits, _sortable_bits(s_emit_hi)).astype(jnp.int32)
+    cnt_a = jnp.maximum(rA - aA, 0)
+    # class B: u.lo < s.lo < u.hi — strict-stab window of S natives per
+    # U emitter (side="right" excludes s.lo == u.lo, already class A)
+    u_emit_hi = jnp.where(
+        u_emit_ids >= 0,
+        jnp.take(u_hi, jnp.clip(u_emit_ids, 0, m - 1)), -jnp.inf)
+    bB = ss_r(s_nat_bits, u_emit_bits).astype(jnp.int32)
+    cB = ss_l(s_nat_bits, _sortable_bits(u_emit_hi)).astype(jnp.int32)
+    cnt_b = jnp.maximum(cB - bB, 0)
+
+    # globalize window starts into the flat emitter index space of the
+    # opposite side (row stride = natives + suffix width); windows only
+    # ever cover native columns [0, cap), which occupy the row prefix
+    cap_e_u = cap_u + suf_u
+    cap_e_s = cap_s + suf_s
+    rows = jnp.arange(ncells, dtype=jnp.int32)[:, None]
+    starts = jnp.concatenate([(aA + rows * cap_e_u).reshape(-1),
+                              (bB + rows * cap_e_s).reshape(-1)])
+    counts = jnp.concatenate([cnt_a.reshape(-1), cnt_b.reshape(-1)])
+    lim = jnp.int32(max_pairs)
+    incl = jax.lax.associative_scan(
+        lambda a, b: jnp.minimum(a + b, lim), jnp.minimum(counts, lim))
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), incl])
+    return (s_emit_ids.reshape(-1), u_emit_ids.reshape(-1),
+            starts, counts, offs)
+
+
+@partial(jax.jit, static_argnames=("ncells", "cap_s", "suf_s", "cap_u",
+                                   "suf_u", "max_pairs"))
+def _hsbm_emit(s_lo, s_hi, u_lo, u_hi, lb, width, *, ncells: int,
+               cap_s: int, suf_s: int, cap_u: int, suf_u: int,
+               max_pairs: int):
+    """XLA pass 2 for the hybrid: one thread per output slot.
+
+    Identical slot arithmetic to ``_twopass_emit``; the only difference
+    is that emitter/partner identities go through the ``sid``/``uid``
+    tables instead of being the emitter index itself.  Returns
+    ``(pairs, counts)`` — counts is the unclipped per-emitter vector for
+    the host-side exact int64 K.
+    """
+    sid, uid, starts, counts, offs = _hsbm_phase1(
+        s_lo, s_hi, u_lo, u_hi, lb, width, ncells=ncells, cap_s=cap_s,
+        suf_s=suf_s, cap_u=cap_u, suf_u=suf_u, max_pairs=max_pairs)
+    n_a = ncells * (cap_s + suf_s)
+    n_b = ncells * (cap_u + suf_u)
+    t = jnp.arange(max_pairs, dtype=jnp.int32)
+    e = jnp.searchsorted(offs, t, side="right").astype(jnp.int32) - 1
+    e = jnp.minimum(e, n_a + n_b - 1)
+    j = t - offs[e]
+    valid = (j >= 0) & (j < counts[e])
+    is_a = e < n_a
+    s_own = sid[jnp.minimum(e, n_a - 1)]
+    u_own = uid[jnp.clip(e - n_a, 0, n_b - 1)]
+    u_from_a = uid[jnp.clip(starts[e] + j, 0, n_b - 1)]
+    s_from_b = sid[jnp.clip(starts[e] + j, 0, n_a - 1)]
+    s_idx = jnp.where(valid, jnp.where(is_a, s_own, s_from_b), -1)
+    u_idx = jnp.where(valid, jnp.where(is_a, u_from_a, u_own), -1)
+    pairs = jnp.stack([s_idx, u_idx], axis=1).astype(jnp.int32)
+    return pairs, counts
+
+
+def hsbm_pairs(S: Regions, U: Regions, max_pairs: int,
+               ncells: int | None = None):
+    """Enumerate 1-D overlaps via the hybrid grid+SBM (XLA pass 2).
+
+    Same contract as ``sbm_pairs`` (−1-padded buffer + exact python-int
+    K), different pass-1 engine and emission order (cell-major).  Grid
+    geometry is measured host-side per call; ``ncells`` overrides the
+    heuristic cell count.
+    """
+    assert S.d == 1
+    if S.n == 0 or U.n == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    from .grid import hsbm_geometry
+    s_lo, s_hi = S.lo[:, 0], S.hi[:, 0]
+    u_lo, u_hi = U.lo[:, 0], U.hi[:, 0]
+    g = hsbm_geometry(s_lo, s_hi, u_lo, u_hi, ncells=ncells)
+    pairs, counts = _hsbm_emit(
+        s_lo, s_hi, u_lo, u_hi, jnp.float32(g.lb), jnp.float32(g.width),
+        max_pairs=max_pairs, **g.statics())
+    count = int(np.sum(np.asarray(counts), dtype=np.int64))
+    return pairs, count
 
 
 def sbm_pairs(S: Regions, U: Regions, max_pairs: int):

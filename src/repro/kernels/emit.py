@@ -148,6 +148,36 @@ def _pair_halves(e, j, start, cnt, perm_s_ref, perm_u_ref, *, n: int,
     return s_idx, u_idx
 
 
+@functools.partial(jax.jit, static_argnames=("n_a", "n_b"))
+def remap_slot_pairs(pairs, sid, uid, *, n_a: int, n_b: int):
+    """Map slot-space pair halves back to original region ids (hsbm).
+
+    The hybrid grid+SBM pass 1 (``core.sbm._hsbm_phase1``) reuses every
+    emit kernel unchanged by relabeling: its ``n_a``/``n_b`` flattened
+    emitter-table rows play the roles of the flat path's n/m emitters,
+    and the *shifted id tables* ``sid + n_a`` / ``uid + n_b`` play the
+    sort permutations.  A kernel-emitted pair half is then either an
+    own-emitter slot index (class-A s-half: ``< n_a``; class-B u-half:
+    ``< n_b``) or a gathered shifted id (``>= n_a`` resp. ``>= n_b``) —
+    the two ranges are disjoint by construction.  This helper undoes
+    the encoding: −1 pads pass through, slot values gather the id
+    table, shifted values subtract the shift.  Valid slots never
+    gather a pad row of the id tables (emitter windows only cover real
+    natives), so the result is exactly the original-id buffer the XLA
+    hybrid pass 2 (``core.sbm._hsbm_emit``) writes.
+    """
+    c0, c1 = pairs[:, 0], pairs[:, 1]
+    s_idx = jnp.where(
+        c0 < 0, -1,
+        jnp.where(c0 < n_a, jnp.take(sid, jnp.clip(c0, 0, n_a - 1)),
+                  c0 - n_a))
+    u_idx = jnp.where(
+        c1 < 0, -1,
+        jnp.where(c1 < n_b, jnp.take(uid, jnp.clip(c1, 0, n_b - 1)),
+                  c1 - n_b))
+    return jnp.stack([s_idx, u_idx], axis=1)
+
+
 # ---------------------------------------------------------------------------
 # resident kernel — all five tables in VMEM for the whole grid
 # ---------------------------------------------------------------------------

@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.pairs import PairsResult
 from ..core.regions import Regions
-from ..core.sbm import _endpoint_stream, _twopass_phase1
+from ..core.sbm import _endpoint_stream, _hsbm_phase1, _twopass_phase1
 from . import bfm as bfm_kernel
 from . import emit as emit_kernel
 from . import sbm_sweep as sweep_kernel
@@ -181,14 +182,14 @@ def choose_emit_route(n: int, m: int, *,
     return "xla"
 
 
-class CSRPairs:
-    """Lazy pair view over the CSR emit form — decode windows on demand.
+class CSRPairs(PairsResult):
+    """Lazy ``PairsResult`` over the CSR emit form — decode on demand.
 
-    Behaves like the dense ``(cap, 2)`` int32 −1-padded pair buffer the
-    other routes return, but holds only pass 1's compressed tables on
-    device (packed compacted emitter table + the two padded sort
-    permutations: O(n+m) words, never O(K)).  ``decode(start, stop)``
-    materializes just that slot window through the constant-VMEM
+    Same contract as the dense ``DensePairs`` the other routes wrap,
+    but holds only pass 1's compressed tables on device (packed
+    compacted emitter table + the two padded sort permutations:
+    O(n+m) words, never O(K)).  ``decode(start, stop)`` materializes
+    just that slot window through the constant-VMEM
     ``kernels.emit.csr_decode_window`` kernel — bit-identical to the
     dense buffer's same slice, including the −1 pad past the true
     count.  Windows are padded up to a power of two before the kernel
@@ -196,10 +197,11 @@ class CSRPairs:
     the window *offset* is a traced scalar and never retraces.
 
     ``np.asarray(view)`` / ``to_dense()`` materialize the full dense
-    buffer (assembled window-by-window on host for ``__array__``), so
-    every dense consumer — ``pairs_to_set``, ``validate_pairs``, the
-    parity suites — works unchanged; large-K callers should iterate
-    ``windows()`` instead and never hold the O(K) buffer.
+    buffer (inherited from ``PairsResult``, assembled window-by-window
+    on host for ``__array__``), so every dense consumer —
+    ``pairs_to_set``, ``validate_pairs``, the parity suites — works
+    unchanged; large-K callers should iterate ``windows()`` instead
+    and never hold the O(K) buffer.
     """
 
     def __init__(self, tab, perm_s_pad, perm_u_pad, *, n: int, m: int,
@@ -225,28 +227,12 @@ class CSRPairs:
                    block=block, interpret=interpret)
 
     @property
-    def shape(self):
-        return (self.cap, 2)
-
-    @property
-    def dtype(self):
-        return np.int32
-
-    def __len__(self) -> int:
-        return self.cap
-
-    @property
     def nbytes(self) -> int:
         """Device bytes actually held (the compressed CSR form)."""
         if self.tab is None:
             return 0
         return 4 * int(self.tab.size + self.perm_s_pad.size
                        + self.perm_u_pad.size)
-
-    @property
-    def dense_nbytes(self) -> int:
-        """Bytes a dense (cap, 2) int32 buffer would occupy."""
-        return self.cap * 2 * 4
 
     def decode(self, start: int = 0, stop: int | None = None):
         """Dense int32 (stop−start, 2) slice of slots [start, stop).
@@ -255,10 +241,7 @@ class CSRPairs:
         real pairs in slot order below the true count (clipped at
         ``cap``), −1 pads above it.
         """
-        stop = self.cap if stop is None else stop
-        if not 0 <= start <= stop <= self.cap:
-            raise ValueError(
-                f"decode window [{start}, {stop}) outside [0, {self.cap}]")
+        stop = self._check_window(start, stop)
         nreq = stop - start
         if nreq == 0:
             return emit_kernel._empty_pairs()
@@ -273,26 +256,10 @@ class CSRPairs:
             block=self.block, interpret=self.interpret)
         return out[:nreq]
 
-    def windows(self, chunk: int = 1 << 16):
-        """Yield ``(start, np.ndarray)`` dense chunks in slot order."""
-        for w0 in range(0, self.cap, chunk):
-            yield w0, np.asarray(self.decode(w0, min(w0 + chunk, self.cap)))
-
-    def to_dense(self):
-        """Full dense (cap, 2) device buffer (one decode call)."""
-        if self.cap == 0:
-            return emit_kernel._empty_pairs()
-        return self.decode(0, self.cap)
-
-    def __array__(self, dtype=None, copy=None):
-        out = np.full((self.cap, 2), -1, np.int32)
-        for w0, w in self.windows():
-            out[w0:w0 + w.shape[0]] = w
-        return out if dtype is None else out.astype(dtype)
-
     def __repr__(self) -> str:
-        return (f"CSRPairs(cap={self.cap}, count={self.count}, "
-                f"n={self.n}, m={self.m}, nbytes={self.nbytes}, "
+        return (f"{type(self).__name__}(cap={self.cap}, "
+                f"count={self.count}, n={self.n}, m={self.m}, "
+                f"nbytes={self.nbytes}, "
                 f"dense_nbytes={self.dense_nbytes})")
 
 
@@ -388,6 +355,150 @@ def twopass_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
                  max_pairs=max_pairs, block=block, interpret=interpret)
     count = int(np.sum(np.asarray(cnt_a), dtype=np.int64)
                 + np.sum(np.asarray(cnt_b), dtype=np.int64))
+    return pairs, count
+
+
+# ---------------------------------------------------------------------------
+# hybrid grid+SBM (hsbm) — bucketed pass 1 feeding the same emit kernels
+# ---------------------------------------------------------------------------
+
+_HSBM_STATICS = ("ncells", "cap_s", "suf_s", "cap_u", "suf_u", "max_pairs")
+
+
+@functools.partial(jax.jit, static_argnames=_HSBM_STATICS)
+def _hsbm_tables(s_lo, s_hi, u_lo, u_hi, lb, width, *, ncells, cap_s,
+                 suf_s, cap_u, suf_u, max_pairs):
+    """Hybrid pass 1 (benchmark/count target, mirrors ``_twopass_tables``).
+
+    Returns ``(sid, uid, starts, counts, offs)`` from
+    ``core.sbm._hsbm_phase1`` — grid geometry statics come from
+    ``core.grid.hsbm_geometry``; ``lb``/``width`` are traced f32
+    scalars so only shape/geometry changes retrace.
+    """
+    return _hsbm_phase1(s_lo, s_hi, u_lo, u_hi, lb, width, ncells=ncells,
+                        cap_s=cap_s, suf_s=suf_s, cap_u=cap_u,
+                        suf_u=suf_u, max_pairs=max_pairs)
+
+
+@functools.partial(jax.jit, static_argnames=_HSBM_STATICS + ("block",))
+def _hsbm_csr_tables(s_lo, s_hi, u_lo, u_hi, lb, width, *, ncells, cap_s,
+                     suf_s, cap_u, suf_u, max_pairs, block):
+    """Hybrid pass 1 + CSR packing (mirrors ``_csr_tables``)."""
+    sid, uid, starts, counts, offs = _hsbm_phase1(
+        s_lo, s_hi, u_lo, u_hi, lb, width, ncells=ncells, cap_s=cap_s,
+        suf_s=suf_s, cap_u=cap_u, suf_u=suf_u, max_pairs=max_pairs)
+    n_a = ncells * (cap_s + suf_s)
+    n_b = ncells * (cap_u + suf_u)
+    bl = emit_kernel.lane_pad(block)
+    tab = emit_kernel.pack_emitter_tables(
+        offs, counts, starts, n=n_a, m=n_b,
+        min_len=emit_kernel.stream_window(bl))
+    ps = emit_kernel.pad_perm_for_runs(sid + n_a, bl)
+    pu = emit_kernel.pad_perm_for_runs(uid + n_b, bl)
+    return tab, ps, pu, sid, uid, counts
+
+
+class HsbmCSRPairs(CSRPairs):
+    """CSR view over the hybrid pass 1 — decodes to original ids.
+
+    The packed table and padded "permutations" live in the hybrid's
+    emitter-slot space (``n``/``m`` are the flattened table sizes
+    ``n_emit_s``/``n_emit_u``, the id tables are shifted by them);
+    ``decode`` runs the stock CSR kernel and then
+    ``kernels.emit.remap_slot_pairs`` — so every window is
+    bit-identical to the hybrid XLA pass 2, and ``windows()`` /
+    ``to_dense()`` / ``__array__`` inherit that through ``decode``.
+    """
+
+    def __init__(self, *args, sid=None, uid=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.sid = sid
+        self.uid = uid
+
+    @property
+    def nbytes(self) -> int:
+        """Compressed form + the slot→id remap tables it decodes with."""
+        base = CSRPairs.nbytes.fget(self)
+        if self.tab is None:
+            return base
+        return base + 4 * int(self.sid.size + self.uid.size)
+
+    def decode(self, start: int = 0, stop: int | None = None):
+        out = super().decode(start, stop)
+        if self.tab is None or out.shape[0] == 0:
+            return out
+        return emit_kernel.remap_slot_pairs(out, self.sid, self.uid,
+                                            n_a=self.n, n_b=self.m)
+
+
+def hsbm_pairs_pallas(S: Regions, U: Regions, max_pairs: int, *,
+                      geom=None, ncells: int | None = None,
+                      block: int = emit_kernel.DEF_BLOCK,
+                      interpret: bool = False, route: str = "auto",
+                      budget: int | None = None,
+                      dense_only: bool = False):
+    """Hybrid grid+SBM pair enumeration through the Pallas emit kernels.
+
+    Same contract and route policy as ``twopass_pairs_pallas`` — the
+    hybrid's flattened per-cell emitter tables simply take the place of
+    the flat path's n/m emitters (so ``choose_emit_route`` sees the
+    padded table sizes, which is what actually determines VMEM need).
+    All four routes produce identical decoded output: the kernels run
+    in emitter-slot space and ``kernels.emit.remap_slot_pairs`` maps
+    back to original region ids; the xla route emits original ids
+    directly (``core.sbm._hsbm_emit``).  ``geom`` (an
+    ``HsbmGeometry``) skips the host measurement; otherwise geometry
+    is measured here, with ``ncells`` overriding the heuristic grid.
+    """
+    global _LAST_EMIT_ROUTE
+    assert S.d == 1
+    if route not in EMIT_ROUTES:
+        raise ValueError(f"route must be one of {EMIT_ROUTES}, got {route}")
+    if dense_only and route == "csr":
+        raise ValueError(
+            "emit_route='csr' returns a lazy CSRPairs view, but this "
+            "caller needs a dense candidate buffer (d > 1 verify path); "
+            "pin 'streaming'/'xla' or leave 'auto'")
+    if S.n == 0 or U.n == 0:
+        _LAST_EMIT_ROUTE = None
+        return jnp.full((max_pairs, 2), -1, jnp.int32), 0
+    s_lo, s_hi = S.lo[:, 0], S.hi[:, 0]
+    u_lo, u_hi = U.lo[:, 0], U.hi[:, 0]
+    if geom is None:
+        from ..core.grid import hsbm_geometry
+        geom = hsbm_geometry(s_lo, s_hi, u_lo, u_hi, ncells=ncells)
+    n_a, n_b = geom.n_emit_s, geom.n_emit_u
+    if route == "auto":
+        route = choose_emit_route(n_a, n_b, block=block, budget=budget,
+                                  dense_only=dense_only)
+    _LAST_EMIT_ROUTE = route
+    lb = jnp.float32(geom.lb)
+    width = jnp.float32(geom.width)
+    if route == "xla":
+        from ..core.sbm import _hsbm_emit
+        pairs, counts = _hsbm_emit(s_lo, s_hi, u_lo, u_hi, lb, width,
+                                   max_pairs=max_pairs, **geom.statics())
+        return pairs, int(np.sum(np.asarray(counts), dtype=np.int64))
+    if route == "csr":
+        tab, ps, pu, sid, uid, counts = _hsbm_csr_tables(
+            s_lo, s_hi, u_lo, u_hi, lb, width, max_pairs=max_pairs,
+            block=block, **geom.statics())
+        count = int(np.sum(np.asarray(counts), dtype=np.int64))
+        view = HsbmCSRPairs(tab, ps, pu, n=n_a, m=n_b, cap=max_pairs,
+                            count=count, block=block, interpret=interpret,
+                            sid=sid, uid=uid)
+        return view, count
+    sid, uid, starts, counts, offs = _hsbm_tables(
+        s_lo, s_hi, u_lo, u_hi, lb, width, max_pairs=max_pairs,
+        **geom.statics())
+    emit = (emit_kernel.twopass_emit if route == "resident"
+            else emit_kernel.twopass_emit_streaming)
+    slots = emit(offs, counts, starts, sid + n_a, uid + n_b, n=n_a,
+                 m=n_b, max_pairs=max_pairs, block=block,
+                 interpret=interpret)
+    pairs = emit_kernel.remap_slot_pairs(slots, sid, uid, n_a=n_a,
+                                         n_b=n_b)
+    count = int(np.sum(np.asarray(counts), dtype=np.int64))
     return pairs, count
 
 

@@ -7,6 +7,24 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import MatchSpec, build_plan
+
+
+def plan_count(S, U, algo="sbm", *, max_pairs=None, **kw):
+    """Exact K via a fixed-capacity xla plan (the tests' reference
+    path; ``max_pairs`` never affects the count)."""
+    spec = MatchSpec(algo=algo, backend="xla", capacity="fixed",
+                     max_pairs=max_pairs or 1, **kw)
+    return build_plan(spec, S.n, U.n, S.d).count(S, U)
+
+
+def plan_pairs(S, U, max_pairs, algo="sbm", **kw):
+    """(PairsResult, exact K) via a fixed-capacity xla plan: the buffer
+    is exactly ``(max_pairs, 2)`` and truncation is reported by K."""
+    spec = MatchSpec(algo=algo, backend="xla", capacity="fixed",
+                     max_pairs=max_pairs, **kw)
+    return build_plan(spec, S.n, U.n, S.d).pairs(S, U)
+
 
 def interval_cases(n_cases: int = 25, max_n: int = 400, max_m: int = 400,
                    d: int = 1, seed0: int = 1234,

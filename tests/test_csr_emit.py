@@ -198,11 +198,13 @@ def test_view_footprint_is_compressed():
     assert huge.nbytes < huge.dense_nbytes
 
 
-def test_pairs_to_set_windows_validation_names_csr_window():
-    """The windowed pairs_to_set path still validates index ranges."""
+def test_pairs_to_set_windows_validation_names_window():
+    """The windowed pairs_to_set path still validates index ranges and
+    names the offending decode window (the unified PairsResult wording,
+    shared by every lazy view, CSR included)."""
     S, U = paper_workload(seed=19, n_total=128, alpha=1.0)
     view, k = _csr(S, U, 256)
     assert k > 0
     # lie about the update-set size: every real pair is now out of range
-    with pytest.raises(ValueError, match="CSR window"):
+    with pytest.raises(ValueError, match=r"window at slot \d+"):
         pairs_to_set(view, 1, S.n)

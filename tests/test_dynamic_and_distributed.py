@@ -13,7 +13,9 @@ import textwrap
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import paper_workload, DDMService, match_count, brute
+from repro.core import paper_workload, DDMService, brute
+
+from proputils import plan_count
 from repro.core.regions import Regions
 
 
@@ -21,7 +23,7 @@ def test_dynamic_service_full_lifecycle():
     S, U = paper_workload(seed=21, n_total=300, alpha=5.0)
     svc = DDMService(S, U)
     pairs = svc.connect()
-    assert len(pairs) == match_count(S, U, algo="bfm")
+    assert len(pairs) == plan_count(S, U, algo="bfm")
 
     rng = np.random.default_rng(0)
     for step in range(12):
@@ -50,11 +52,10 @@ def test_dynamic_delta_is_local():
 
 
 DIST_SCRIPT = textwrap.dedent("""
-    import os, warnings
+    import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     from repro.core import MatchSpec, build_plan, paper_workload
-    from repro.core.distributed import distributed_sbm_count
     for seed, n, a in [(0, 2000, 10.0), (1, 5000, 1.0), (2, 4096, 100.0),
                        (3, 130, 0.01), (4, 999, 1.0)]:
         S, U = paper_workload(seed=seed, n_total=n, alpha=a)
@@ -63,10 +64,6 @@ DIST_SCRIPT = textwrap.dedent("""
                            S.n, U.n, 1)
         got = dplan.count(S, U)
         assert ref == got, (seed, ref, got)
-        # the legacy shim routes through the same engine path
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            assert distributed_sbm_count(S, U) == ref, seed
     print("DIST_OK")
 """)
 

@@ -1,23 +1,24 @@
-"""MatchSpec → MatchPlan engine: parity with the legacy entry points,
-zero-retrace plan reuse, capacity policies, and deprecation shims.
+"""MatchSpec → MatchPlan engine: cross-algo/backend parity,
+zero-retrace plan reuse, capacity policies, and shim retirement.
 
-Acceptance (ISSUE 2): for every algo and every backend available on CPU
-(``xla``, interpret-mode ``pallas``), ``plan.pairs()`` equals the old
-``match_pairs`` pair set on randomized d ∈ {1, 2, 3} workloads, and a
-repeated call never retraces (checked via the plan's trace counter).
+For every algo and every backend available on CPU (``xla``,
+interpret-mode ``pallas``), ``plan.pairs()`` must return the exact
+oracle pair set on randomized d ∈ {1, 2, 3} workloads, a repeated call
+must never retrace (checked via the plan's trace counter), and the
+removed pre-engine entry points must stay removed.
 """
-import warnings
-
 import numpy as np
 import pytest
 
 from repro.core import (ALGOS, DDMService, MatchSpec, build_plan,
-                        koln_like_workload, make_regions, match_count,
-                        match_pairs, paper_workload, pairs_to_set)
+                        koln_like_workload, make_regions, paper_workload,
+                        pairs_to_set)
 from repro.core import brute
-from repro.core.distributed import distributed_sbm_count
+import repro.core as core_pkg
+import repro.core.dd_match as dd_match_mod
+import repro.core.distributed as distributed_mod
 
-from proputils import interval_cases, oracle_mask
+from proputils import interval_cases, oracle_mask, plan_pairs
 
 BACKENDS_ON_CPU = ("xla", "pallas")
 
@@ -29,28 +30,27 @@ def _spec(algo, backend, **kw):
                      interpret=(backend == "pallas"), **kw)
 
 
-def _legacy_pairs_set(S, U, algo, k):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        pairs, count = match_pairs(S, U, max_pairs=max(k, 1) + 3, algo=algo)
+def _ref_pairs_set(S, U, algo, k):
+    """Reference pair set via the fixed-capacity xla plan."""
+    pairs, count = plan_pairs(S, U, max(k, 1) + 3, algo=algo)
     return pairs_to_set(pairs, max(U.n, 1), max(S.n, 1)), int(count)
 
 
 # ---------------------------------------------------------------------------
-# parity with the legacy API (the acceptance criterion)
+# cross-backend parity (the acceptance criterion)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
 @pytest.mark.parametrize("algo", ALGOS)
 @pytest.mark.parametrize("d", (1, 2, 3))
-def test_plan_pairs_match_legacy(algo, backend, d):
+def test_plan_pairs_match_reference(algo, backend, d):
     for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(
             n_cases=3, d=d, max_n=120, max_m=120):
         S = make_regions(s_lo, s_hi)
         U = make_regions(u_lo, u_hi)
         want_k = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
-        want_set, legacy_k = _legacy_pairs_set(S, U, algo, want_k)
-        assert legacy_k == want_k, f"seed={seed}"
+        want_set, ref_k = _ref_pairs_set(S, U, algo, want_k)
+        assert ref_k == want_k, f"seed={seed}"
         plan = build_plan(_spec(algo, backend), S.n, U.n, d)
         assert plan.count(S, U) == want_k, f"seed={seed}"
         pairs, k = plan.pairs(S, U)
@@ -148,20 +148,19 @@ def test_fixed_policy_truncates_but_reports_exact():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims + pairs_to_set validation (satellites)
+# shim retirement + pairs_to_set validation (satellites)
 # ---------------------------------------------------------------------------
 
-def test_legacy_entry_points_warn_and_agree():
-    S, U = paper_workload(seed=66, n_total=200, alpha=4.0)
-    plan = build_plan(_spec("sbm", "xla"), S.n, U.n, 1)
-    want = plan.count(S, U)
-    with pytest.warns(DeprecationWarning):
-        assert match_count(S, U, algo="sbm") == want
-    with pytest.warns(DeprecationWarning):
-        pairs, k = match_pairs(S, U, max_pairs=want + 1, algo="sbm")
-    assert int(k) == want
-    with pytest.warns(DeprecationWarning):
-        assert distributed_sbm_count(S, U) == want
+def test_removed_shims_stay_removed():
+    """The pre-engine entry points completed their deprecation cycle;
+    they must not resurface on the package or their home modules (the
+    repro.analysis lint enforces the same at the source level)."""
+    for name in ("match_count", "match_pairs", "distributed_sbm_count"):
+        assert not hasattr(core_pkg, name), name
+        assert name not in core_pkg.__all__, name
+    assert not hasattr(dd_match_mod, "match_count")
+    assert not hasattr(dd_match_mod, "match_pairs")
+    assert not hasattr(distributed_mod, "distributed_sbm_count")
 
 
 def test_pairs_to_set_validates_both_sizes():

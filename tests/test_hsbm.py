@@ -1,0 +1,216 @@
+"""Hybrid grid+SBM (``algo="hsbm"``): exactness, geometry extremes,
+PairsResult contract, spec validation, and zero steady-state retrace.
+
+The tentpole's correctness claim is that replacing pass 1's global
+endpoint sorts with coarse grid bucketing + per-cell segmented sorts is
+*exact*: the hybrid must be set-identical to the flat SBM path and the
+numpy brute oracle for d ∈ {1, 2, 3}, on every backend available on
+CPU and under every capacity policy — including the adversarial
+geometries (everything in one cell; fully disjoint cells) and the
+conservative-spill boundary cases the suffix windows exist for.
+"""
+import numpy as np
+import pytest
+
+import repro.core.grid as grid
+from repro.core import (MatchSpec, PairsResult, build_plan, make_regions,
+                        paper_workload, pairs_to_set)
+from repro.core import sbm
+from repro.kernels import ops
+
+from proputils import interval_cases, oracle_mask
+
+BACKENDS_ON_CPU = ("xla", "pallas")
+
+
+def _spec(backend, **kw):
+    kw.setdefault("capacity", "grow")
+    return MatchSpec(algo="hsbm", backend=backend, block=512,
+                     interpret=(backend == "pallas"), **kw)
+
+
+def _oracle_set(S, U):
+    mask = oracle_mask(np.asarray(S.lo), np.asarray(S.hi),
+                       np.asarray(U.lo), np.asarray(U.hi))
+    return {int(a) * max(U.n, 1) + int(b)
+            for a, b in zip(*np.nonzero(mask))}
+
+
+# ---------------------------------------------------------------------------
+# exactness vs the brute oracle (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+@pytest.mark.parametrize("d", (1, 2, 3))
+def test_hsbm_matches_oracle(backend, d):
+    for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(
+            n_cases=6, d=d, max_n=150, max_m=150, include_empty=True):
+        S = make_regions(s_lo, s_hi)
+        U = make_regions(u_lo, u_hi)
+        want = _oracle_set(S, U)
+        plan = build_plan(_spec(backend), S.n, U.n, d)
+        assert plan.count(S, U) == len(want), f"seed={seed} d={d}"
+        res, k = plan.pairs(S, U)
+        assert isinstance(res, PairsResult), f"seed={seed}"
+        assert k == len(want), f"seed={seed} d={d} {backend}"
+        assert pairs_to_set(res, max(U.n, 1), max(S.n, 1)) == want, \
+            f"seed={seed} d={d} {backend}"
+
+
+@pytest.mark.parametrize("capacity", ("exact", "fixed", "grow"))
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+def test_hsbm_capacity_policies_match_flat_sbm(backend, capacity):
+    """hsbm ≡ sbm under every capacity policy (set-identical, same K)."""
+    for d, alpha in ((1, 4.0), (2, 60.0), (3, 350.0)):
+        S, U = paper_workload(seed=70 + d, n_total=400, alpha=alpha, d=d)
+        ref = build_plan(MatchSpec(algo="sbm"), S.n, U.n, d)
+        want_k = ref.count(S, U)
+        assert want_k > 0, (d, alpha)       # the workload must be dense
+        ref_set = pairs_to_set(ref.pairs(S, U)[0], U.n, S.n)
+        kw = {"max_pairs": want_k + 5} if capacity == "fixed" else {}
+        plan = build_plan(_spec(backend, capacity=capacity, **kw),
+                          S.n, U.n, d)
+        res, k = plan.pairs(S, U)
+        assert k == want_k, (d, backend, capacity)
+        assert isinstance(res, PairsResult)
+        assert pairs_to_set(res, U.n, S.n) == ref_set, \
+            (d, backend, capacity)
+        plan.validate_pairs(res, count=k)
+
+
+# ---------------------------------------------------------------------------
+# adversarial geometries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+def test_hsbm_all_regions_in_one_cell(backend):
+    """Identical coordinates: every region lands in cell 0 and the
+    per-cell capacity must absorb the whole set (cap == n)."""
+    n = 96
+    lo = np.full((n, 1), 5.0, np.float32)
+    hi = np.full((n, 1), 6.0, np.float32)
+    S, U = make_regions(lo, hi), make_regions(lo + 0.5, hi + 0.5)
+    plan = build_plan(_spec(backend), S.n, U.n, 1)
+    res, k = plan.pairs(S, U)
+    assert k == n * n
+    assert pairs_to_set(res, U.n, S.n) == _oracle_set(S, U)
+
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+def test_hsbm_fully_disjoint_cells(backend):
+    """Far-apart unit intervals: K = n (self-pairs only), with an
+    explicit ncells override so the geometry actually buckets and the
+    test exercises the per-cell path, not the degenerate single cell
+    (the auto heuristic collapses a 512-region probe to one cell)."""
+    n = 256
+    base = (np.arange(n, dtype=np.float32) * 1000.0)[:, None]
+    S = make_regions(base, base + 1.0)
+    U = make_regions(base + 0.25, base + 0.75)
+    g = grid.hsbm_geometry(np.asarray(S.lo[:, 0]), np.asarray(S.hi[:, 0]),
+                           np.asarray(U.lo[:, 0]), np.asarray(U.hi[:, 0]),
+                           ncells=32)
+    assert g.ncells == 32
+    plan = build_plan(_spec(backend, hsbm_ncells=32), S.n, U.n, 1)
+    assert plan.count(S, U) == n
+    res, k = plan.pairs(S, U)
+    assert k == n
+    assert pairs_to_set(res, U.n, S.n) == {i * n + i for i in range(n)}
+
+
+def test_hsbm_ncells_override_is_exact():
+    """An explicit hsbm_ncells knob changes geometry, never results."""
+    S, U = paper_workload(seed=77, n_total=2000, alpha=8.0)
+    want = build_plan(MatchSpec(algo="sbm"), S.n, U.n, 1).count(S, U)
+    for nc in (1, 4, 64, 1024):
+        plan = build_plan(_spec("xla", hsbm_ncells=nc), S.n, U.n, 1)
+        assert plan.count(S, U) == want, nc
+
+
+def test_hsbm_geometry_blowup_guard():
+    """Skewed data (one hot cell + far outlier) must not let the padded
+    tables blow past the linear-in-(n+m) row bound."""
+    rng = np.random.default_rng(5)
+    lo = np.concatenate([rng.uniform(0.0, 1.0, 4000),
+                         np.array([1e6])]).astype(np.float32)[:, None]
+    hi = lo + np.float32(0.5)
+    S, U = make_regions(lo, hi), make_regions(lo, hi)
+    g = grid.hsbm_geometry(lo[:, 0], hi[:, 0], lo[:, 0], hi[:, 0])
+    rows = g.ncells * (g.cap_s + g.suf_s + g.cap_u + g.suf_u)
+    assert rows <= max(4 * (S.n + U.n), 1 << 16)
+    plan = build_plan(_spec("xla"), S.n, U.n, 1)
+    assert plan.count(S, U) == len(_oracle_set(S, U))
+
+
+# ---------------------------------------------------------------------------
+# PairsResult contract + emit routes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("route", ("resident", "streaming", "csr", "xla"))
+def test_hsbm_pallas_routes_identical(route):
+    S, U = paper_workload(seed=79, n_total=1500, alpha=50.0)
+    want = _oracle_set(S, U)
+    plan = build_plan(_spec("pallas", emit_route=route), S.n, U.n, 1)
+    res, k = plan.pairs(S, U)
+    assert k == len(want), route
+    assert isinstance(res, PairsResult), route
+    if route == "csr":
+        assert isinstance(res, ops.HsbmCSRPairs)
+        assert res.nbytes < res.dense_nbytes
+    assert ops.last_emit_route() == route
+    assert pairs_to_set(res, U.n, S.n) == want, route
+    # windows() must reassemble to the same dense buffer
+    got = np.full((res.cap, 2), -1, np.int32)
+    for w0, win in res.windows(chunk=257):
+        got[w0:w0 + win.shape[0]] = win
+    assert pairs_to_set(got, U.n, S.n) == want, route
+
+
+# ---------------------------------------------------------------------------
+# spec validation + retrace discipline (satellites)
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_csr_route_for_multidim():
+    """emit_route='csr' with d > 1 is a spec-time error: the d-dim
+    verify pass gathers from a dense dim-0 candidate buffer, which a
+    lazy CSR view never materializes."""
+    with pytest.raises(ValueError, match="csr"):
+        MatchSpec(algo="sbm", backend="pallas", emit_route="csr", d=2)
+    with pytest.raises(ValueError, match="csr"):
+        MatchSpec(algo="hsbm", backend="pallas", emit_route="csr", d=3)
+    # d=1 (or unspecified d, checked again at plan build) stays legal
+    MatchSpec(algo="hsbm", backend="pallas", emit_route="csr", d=1)
+    spec = MatchSpec(algo="hsbm", backend="pallas", emit_route="csr")
+    with pytest.raises(ValueError, match="csr"):
+        build_plan(spec, 64, 64, 2, key=("hsbm-csr-d2",))
+
+
+def test_spec_d_must_match_plan_d():
+    spec = MatchSpec(algo="hsbm", d=2)
+    with pytest.raises(ValueError, match="d=2"):
+        build_plan(spec, 64, 64, 3, key=("hsbm-d-mismatch",))
+
+
+@pytest.mark.parametrize("backend", BACKENDS_ON_CPU)
+def test_hsbm_zero_steady_state_retrace(backend):
+    """Fresh same-shape, same-distribution workloads re-measure the
+    geometry on the host but must resolve to the same statics — the
+    steady state never retraces."""
+    plan = build_plan(_spec(backend, capacity="grow"), 600, 600, 1)
+    for i in range(2):                    # warm both executables
+        S, U = paper_workload(seed=90 + i, n_total=1200, alpha=3.0)
+        plan.count(S, U)
+        plan.pairs(S, U)
+    warm = plan.traces
+    for i in range(2, 5):
+        S, U = paper_workload(seed=90 + i, n_total=1200, alpha=3.0)
+        k = plan.count(S, U)
+        res, kp = plan.pairs(S, U)
+        assert k == kp and k > 0
+    assert plan.traces == warm, (backend, plan.traces, warm)
+
+
+def test_hsbm_distributed_backend_rejected():
+    with pytest.raises(ValueError):
+        build_plan(MatchSpec(algo="hsbm", backend="distributed"),
+                   512, 512, 1, key=("hsbm-dist",)).count(
+            *paper_workload(seed=1, n_total=1024, alpha=1.0))

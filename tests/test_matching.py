@@ -9,11 +9,11 @@ semantics and the hi-before-lo sweep ordering).
 import numpy as np
 import pytest
 
-from repro.core import (Regions, make_regions, match_count, match_pairs,
-                        paper_workload, koln_like_workload, pairs_to_set)
+from repro.core import (Regions, make_regions, paper_workload,
+                        koln_like_workload, pairs_to_set)
 from repro.core import sbm, itm, brute, grid
 
-from proputils import interval_cases, oracle_mask
+from proputils import interval_cases, oracle_mask, plan_count, plan_pairs
 
 COUNT_ALGOS = ("bfm", "gbm", "sbm", "sbm_chunked", "sbm_binary", "itm")
 PAIR_ALGOS = ("bfm", "sbm", "itm")
@@ -28,7 +28,7 @@ def test_count_matches_oracle_1d(algo):
     for seed, s_lo, s_hi, u_lo, u_hi in interval_cases(n_cases=20, d=1):
         S, U = _regions(s_lo, s_hi, u_lo, u_hi)
         want = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
-        got = match_count(S, U, algo=algo)
+        got = plan_count(S, U, algo=algo)
         assert got == want, f"seed={seed} algo={algo}: {got} != {want}"
 
 
@@ -40,7 +40,7 @@ def test_pairs_match_oracle_1d(algo):
         want = {(int(a), int(b)) * 1 for a, b in zip(*np.nonzero(mask))}
         want = {int(a) * U.n + int(b) for a, b in zip(*np.nonzero(mask))}
         cap = max(int(mask.sum()), 1) + 7
-        pairs, count = match_pairs(S, U, max_pairs=cap, algo=algo)
+        pairs, count = plan_pairs(S, U, max_pairs=cap, algo=algo)
         assert int(count) == len(want), f"seed={seed}"
         assert pairs_to_set(pairs, U.n) == want, f"seed={seed} algo={algo}"
 
@@ -53,7 +53,7 @@ def test_count_matches_oracle_dd(algo, d):
                                                        max_m=150):
         S, U = _regions(s_lo, s_hi, u_lo, u_hi)
         want = int(oracle_mask(s_lo, s_hi, u_lo, u_hi).sum())
-        got = match_count(S, U, algo=algo)
+        got = plan_count(S, U, algo=algo)
         assert got == want, f"seed={seed} d={d} algo={algo}"
 
 
@@ -63,12 +63,12 @@ def test_empty_sets_all_algos():
     empty = make_regions(np.zeros((0, 1)), np.zeros((0, 1)))
     full = make_regions(np.array([[1.0], [4.0]]), np.array([[3.0], [9.0]]))
     for algo in COUNT_ALGOS:
-        assert match_count(empty, full, algo=algo) == 0, algo
-        assert match_count(full, empty, algo=algo) == 0, algo
-        assert match_count(empty, empty, algo=algo) == 0, algo
+        assert plan_count(empty, full, algo=algo) == 0, algo
+        assert plan_count(full, empty, algo=algo) == 0, algo
+        assert plan_count(empty, empty, algo=algo) == 0, algo
     for algo in PAIR_ALGOS:
         for S, U in ((empty, full), (full, empty), (empty, empty)):
-            pairs, count = match_pairs(S, U, max_pairs=3, algo=algo)
+            pairs, count = plan_pairs(S, U, max_pairs=3, algo=algo)
             assert int(count) == 0, algo
             assert pairs.shape == (3, 2), algo
             assert (np.asarray(pairs) == -1).all(), algo
@@ -79,17 +79,17 @@ def test_halfopen_touching_intervals_do_not_match():
     S = make_regions(np.array([[0.0]]), np.array([[1.0]]))
     U = make_regions(np.array([[1.0]]), np.array([[2.0]]))
     for algo in COUNT_ALGOS:
-        assert match_count(S, U, algo=algo) == 0, algo
+        assert plan_count(S, U, algo=algo) == 0, algo
     # and the mirror case
     for algo in COUNT_ALGOS:
-        assert match_count(U, S, algo=algo) == 0, algo
+        assert plan_count(U, S, algo=algo) == 0, algo
 
 
 def test_identical_intervals_match():
     S = make_regions(np.array([[3.0], [3.0]]), np.array([[7.0], [7.0]]))
     U = make_regions(np.array([[3.0]]), np.array([[7.0]]))
     for algo in COUNT_ALGOS:
-        assert match_count(S, U, algo=algo) == 2, algo
+        assert plan_count(S, U, algo=algo) == 2, algo
 
 
 def test_containment_and_equal_uppers():
@@ -102,7 +102,7 @@ def test_containment_and_equal_uppers():
                        np.asarray(U.lo), np.asarray(U.hi))
     want = int(mask.sum())
     for algo in COUNT_ALGOS:
-        assert match_count(S, U, algo=algo) == want, algo
+        assert plan_count(S, U, algo=algo) == want, algo
 
 
 def test_paper_workload_alpha_scaling():
@@ -111,7 +111,7 @@ def test_paper_workload_alpha_scaling():
     k = {}
     for alpha in (0.01, 1.0, 100.0):
         S, U = paper_workload(seed=11, n_total=4000, alpha=alpha)
-        k[alpha] = match_count(S, U, algo="sbm")
+        k[alpha] = plan_count(S, U, algo="sbm")
     assert k[0.01] < k[1.0] < k[100.0]
     # alpha=100 with N=4000: l = alpha*L/N, E[K] ~ n*m*2l/L = alpha*N/2
     approx = 100.0 * 4000 / 2
@@ -120,9 +120,9 @@ def test_paper_workload_alpha_scaling():
 
 def test_koln_like_workload_runs():
     S, U = koln_like_workload(seed=1, n_positions=2000)
-    a = match_count(S, U, algo="sbm")
-    b = match_count(S, U, algo="sbm_binary")
-    c = match_count(S, U, algo="itm")
+    a = plan_count(S, U, algo="sbm")
+    b = plan_count(S, U, algo="sbm_binary")
+    c = plan_count(S, U, algo="itm")
     assert a == b == c
     assert a >= S.n  # every region overlaps itself's twin at least
 
@@ -131,7 +131,7 @@ def test_gbm_ncells_invariance():
     """GBM must report identical K for any ncells (paper: ncells only
     affects speed; the res-set/first-cell dedup guards correctness)."""
     S, U = paper_workload(seed=3, n_total=3000, alpha=10.0)
-    want = match_count(S, U, algo="sbm")
+    want = plan_count(S, U, algo="sbm")
     for ncells in (7, 64, 500, 3000):
         assert grid.gbm_count(S, U, ncells=ncells) == want, ncells
 
@@ -188,7 +188,7 @@ def test_bfm_tiled_equals_direct():
 
 def test_pairs_overflow_reports_true_count():
     S, U = paper_workload(seed=9, n_total=500, alpha=50.0)
-    true_k = match_count(S, U, algo="sbm")
-    pairs, count = match_pairs(S, U, max_pairs=5, algo="sbm")
+    true_k = plan_count(S, U, algo="sbm")
+    pairs, count = plan_pairs(S, U, max_pairs=5, algo="sbm")
     assert int(count) == true_k and true_k > 5
     assert pairs.shape == (5, 2)

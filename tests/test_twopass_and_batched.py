@@ -15,11 +15,11 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import (DDMService, Regions, make_regions, match_count,
-                        match_pairs, pairs_to_set, paper_workload)
+from repro.core import (DDMService, Regions, make_regions, pairs_to_set,
+                        paper_workload)
 from repro.core import brute, itm, sbm
 
-from proputils import interval_cases, oracle_mask
+from proputils import interval_cases, oracle_mask, plan_count, plan_pairs
 
 
 def _regions(s_lo, s_hi, u_lo, u_hi):
@@ -40,7 +40,7 @@ def test_twopass_pairs_match_oracle_dd(algo, d):
         want = {int(a) * max(U.n, 1) + int(b)
                 for a, b in zip(*np.nonzero(mask))}
         cap = max(int(mask.sum()), 1) + 3
-        pairs, count = match_pairs(S, U, max_pairs=cap, algo=algo)
+        pairs, count = plan_pairs(S, U, max_pairs=cap, algo=algo)
         assert int(count) == len(want), f"seed={seed} d={d} algo={algo}"
         assert pairs.shape == (cap, 2)
         assert pairs_to_set(pairs, max(U.n, 1)) == want, \
@@ -72,7 +72,7 @@ def test_twopass_no_window_blowup_on_long_regions():
                            np.full((2000, 1), 2e6 + 1)]).astype(np.float32)
     S, U = _regions(s_lo, s_hi, u_lo, u_hi)
     k = 4 * n
-    pairs, count = match_pairs(S, U, max_pairs=k, algo="sbm")
+    pairs, count = plan_pairs(S, U, max_pairs=k, algo="sbm")
     assert int(count) == k
     assert pairs_to_set(pairs, U.n) == {
         s * U.n + u for s in range(n) for u in range(4)}
@@ -80,8 +80,8 @@ def test_twopass_no_window_blowup_on_long_regions():
 
 def test_twopass_truncation_reports_exact_count():
     S, U = paper_workload(seed=9, n_total=500, alpha=50.0)
-    true_k = match_count(S, U, algo="sbm")
-    pairs, count = match_pairs(S, U, max_pairs=7, algo="sbm")
+    true_k = plan_count(S, U, algo="sbm")
+    pairs, count = plan_pairs(S, U, max_pairs=7, algo="sbm")
     assert int(count) == true_k and true_k > 7
     arr = np.asarray(pairs)
     assert arr.shape == (7, 2) and (arr >= 0).all()  # buffer full, valid
@@ -92,22 +92,22 @@ def test_twopass_truncation_reports_exact_count():
     assert all(mask[s, u] for s, u in arr)
 
 
-def test_match_count_dd_no_overflow_with_small_max_pairs():
+def test_count_dd_no_overflow_with_small_max_pairs():
     """The old d>1 path raised OverflowError when the candidate count
     exceeded a user-passed max_pairs; now the exact bound wins."""
     S, U = paper_workload(seed=3, n_total=600, alpha=30.0, d=2)
     want = brute.bfm_count(S, U)
-    assert match_count(S, U, algo="sbm", max_pairs=2) == want
-    assert match_count(S, U, algo="itm", max_pairs=2) == want
+    assert plan_count(S, U, algo="sbm", max_pairs=2) == want
+    assert plan_count(S, U, algo="itm", max_pairs=2) == want
 
 
 def test_itm_count_int64_path_large_counts():
     """ITM enumeration count must not be narrowed to int32 semantics:
     the count is returned as an int64-safe python int."""
     S, U = paper_workload(seed=5, n_total=2000, alpha=50.0)
-    _, count = match_pairs(S, U, max_pairs=8, algo="itm")
+    _, count = plan_pairs(S, U, max_pairs=8, algo="itm")
     assert isinstance(int(count), int)
-    assert int(count) == match_count(S, U, algo="itm")
+    assert int(count) == plan_count(S, U, algo="itm")
 
 
 # ---------------------------------------------------------------------------
