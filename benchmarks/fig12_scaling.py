@@ -10,6 +10,11 @@ and the sharded batched query, each parity-checked against ``xla``.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
@@ -81,3 +86,66 @@ def run():
                          capacity="grow", max_pairs=16)
         t_q = bench(qplan.query, tree, U, q_lo, q_hi, iters=2)
         row(f"fig12c/dist_query_p{p}", t_q, f"b={q_lo.shape[0]}")
+
+
+# -- §c smoke: the dist_pairs endpoints (P = 1 vs P = 8) as CI rows ---------
+
+_SMOKE_MARK = "FIG12C_SMOKE="
+
+
+def _smoke_c(n: int = 100_000) -> list[tuple[str, float, str]]:
+    """Time the distributed pair emit at the P = 1 and P = 8 endpoints.
+
+    Needs >= 8 devices (``run_smoke`` forces them in a subprocess when
+    the parent mesh is smaller).  Parity-checks the emitted K against
+    the local engine before timing, so a wrong-but-fast emit can never
+    post a row.
+    """
+    S, U = paper_workload(seed=4, n_total=n, alpha=1.0)
+    k_ref = plan_for(S, U, "sbm", capacity="exact").count(S, U)
+    devs = jax.devices()
+    out = []
+    for p in (1, 8):
+        mesh = Mesh(np.array(devs[:p]), ("shards",))
+        plan = plan_for(S, U, "sbm", backend="distributed", mesh=mesh,
+                        capacity="exact")
+        _, kp = plan.pairs(S, U)
+        assert kp == k_ref, (p, kp, k_ref)
+        t = bench(plan.pairs, S, U, iters=2)
+        out.append((f"fig12c/dist_pairs_p{p}", t, f"K={k_ref}"))
+    return out
+
+
+def run_smoke() -> None:
+    """CI rows for the §c strong-scaling endpoints.
+
+    The smoke runner executes on however many devices the host exposes
+    (one, on the CI runners), so the 8-shard measurement runs in a
+    subprocess with ``--xla_force_host_platform_device_count=8`` and
+    ships its rows back over stdout as a marked JSON line; they are
+    re-emitted here so the regression gate sees them like any other row.
+    """
+    if len(jax.devices()) >= 8:
+        for name, t, derived in _smoke_c():
+            row(name, t, derived)
+        return
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig12_scaling", "--smoke-c"],
+        capture_output=True, text=True, env=env, timeout=1800)
+    payload = [ln for ln in proc.stdout.splitlines()
+               if ln.startswith(_SMOKE_MARK)]
+    if proc.returncode != 0 or not payload:
+        raise RuntimeError(
+            "fig12c smoke subprocess failed "
+            f"(rc={proc.returncode}):\n{proc.stderr[-2000:]}")
+    for name, t, derived in json.loads(payload[-1][len(_SMOKE_MARK):]):
+        row(name, t, derived)
+
+
+if __name__ == "__main__":
+    if "--smoke-c" in sys.argv:
+        print(_SMOKE_MARK + json.dumps(_smoke_c()), flush=True)
+    else:
+        run()

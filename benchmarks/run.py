@@ -7,8 +7,9 @@ the unit tag in `derived`).
 ``--smoke`` is the CI mode: compile a MatchPlan and run one tiny sweep
 per backend available on CPU (``xla``, interpret-mode ``pallas``, and
 ``distributed`` over the local devices), assert cross-backend parity,
-and time the plan-reuse pattern — minutes, not hours, so it runs on
-every PR.  ``--out BENCH_smoke.json`` records the rows as a JSON
+time the plan-reuse pattern, and measure the fig12c dist_pairs
+strong-scaling endpoints (P = 1 vs P = 8, in an 8-device subprocess)
+— minutes, not hours, so it runs on every PR.  ``--out BENCH_smoke.json`` records the rows as a JSON
 trajectory file (uploaded as a CI artifact) and ``--baseline
 benchmarks/baseline_smoke.json`` turns the run into a regression gate:
 the process exits non-zero if any row is more than 2× slower than the
@@ -64,11 +65,12 @@ def smoke() -> None:
             row(f"smoke/{algo}_{backend}_n{SMOKE_N}", t,
                 f"K={k};retraces=0")
 
-    from . import ddm_dynamic, large_n_emit, plan_reuse
+    from . import ddm_dynamic, fig12_scaling, large_n_emit, plan_reuse
 
     plan_reuse.run_smoke()
     large_n_emit.run_smoke()
     ddm_dynamic.run_smoke()
+    fig12_scaling.run_smoke()
     print("# smoke_parity_ok", flush=True)
 
 

@@ -76,8 +76,8 @@ OUT_DTYPES = {
     "itm_flatten": (I32,),
     "itm_query_dd": (I32, I32),
     "verify": (I32, I32),
-    "dist_pairs": (I32, I32, I32),
-    "dist_compact": (I32,),
+    "dist_pairs_pass1": (I32, np.float32, I32, np.float32, I32, I32),
+    "dist_pairs_emit": (I32, I32),
     "dist_query_counts": (I32,),
     "dist_query": (I32, I32),
 }
@@ -320,6 +320,17 @@ def audit_retrace_matrix(report: Report) -> None:
     audit_grow_bound(
         query_factory, max_k=1 << 20,
         target="MatchPlan._resolve_query_cap[grow]", report=report)
+
+    def cap_dev_factory():
+        # per-device emit capacity of the distributed backend: drifting
+        # per-device pair totals must ride the same pow2 memo ladder
+        plan = MatchPlan(MatchSpec(backend="distributed",
+                                   capacity="grow"), 64, 64, 1)
+        return plan._resolve_cap_dev
+
+    audit_grow_bound(
+        cap_dev_factory, max_k=1 << 20,
+        target="MatchPlan._resolve_cap_dev[grow]", report=report)
 
     # live steady state: the second identical call must not retrace.
     # hsbm re-measures its grid geometry per call on the host, so the

@@ -71,7 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import brute, grid, itm, sbm
-from .pairs import DensePairs, PairsResult
+from .pairs import DensePairs, PairsResult, ShardedPairs
 from .regions import Regions
 
 Array = jax.Array
@@ -184,6 +184,7 @@ class MatchPlan:
         self._exec: dict[str, Any] = {}
         self._cap: int | None = None        # memoized output capacity
         self._cand_cap: int | None = None   # memoized dim-0 candidate cap
+        self._cap_dev: int | None = None    # memoized per-device emit cap
         self._query_cap = max(spec.max_pairs or 1, 1)
 
     def __repr__(self) -> str:
@@ -236,6 +237,27 @@ class MatchPlan:
             return self._cand_cap
         self._cand_cap = max(exact_c, 1)
         return self._cand_cap
+
+    def _resolve_cap_dev(self, need: int) -> int:
+        """Per-device emit-buffer capacity for the distributed backend.
+
+        ``need`` is the max over per-device dim-0 pair totals (from the
+        sharded pass-1 counts).  ``grow`` memoizes a monotone
+        power-of-two so steady-state churn reuses one compiled emit;
+        ``fixed`` at d == 1 uses ``max_pairs`` per device — a static,
+        data-independent shape that never retraces (truncation stays
+        exact: the assembled prefix is the same first-``max_pairs``
+        slice a global emit would keep); everything else sizes exactly
+        (d > 1 must hold every dim-0 candidate so the verified K stays
+        exact, matching the old exactly-sized candidate buffer).
+        """
+        need = max(need, 1)
+        if self.spec.capacity == "grow":
+            self._cap_dev = max(self._cap_dev or 1, _pow2(need))
+            return self._cap_dev
+        if self.spec.capacity == "fixed" and self.d == 1:
+            return max(self.spec.max_pairs, 1)
+        return need
 
     def _project(self, R: Regions) -> Regions:
         return Regions(R.lo[:, :1], R.hi[:, :1])
@@ -576,13 +598,22 @@ class MatchPlan:
         return cand, k
 
     def _pairs_distributed(self, S: Regions, U: Regions, out_cap: int):
-        """Sharded two-pass emit (paper §4 + the exact count-then-emit).
+        """Sharded two-pass emit with per-device slot-bound buffers.
 
-        d == 1 emits straight into the ``out_cap`` global buffer (slot
-        ranges are contiguous, no holes); d > 1 emits into an
-        exactly-sized dim-0 candidate buffer with the remaining
-        dimensions filtered at emit time, then recompacts the surviving
-        pairs into ``out_cap`` slots.  Both report the exact K.
+        Pass 1 (``dist_pairs_pass1``) runs the distributed sample sort
+        of both lo streams *with an index payload* — the sort
+        permutations come out of the same ``all_to_all`` the counting
+        path uses, no replicated argsort — plus the sharded exact
+        per-emitter counts.  The host reduces the counts twice: the
+        int64 sum is the exact K, and the per-device maxima size the
+        static per-device emit capacity (``_resolve_cap_dev``).  Pass 2
+        (``dist_pairs_emit``) emits each device's pairs into its own
+        ``(cap_dev, 2)`` buffer — O(K/P + P) per device, no global-cap
+        scan, no O(cap) psum — and the result stays sharded inside a
+        ``ShardedPairs`` until a consumer asks for the dense view.
+        d > 1 filters the remaining dimensions at emit time and
+        compacts locally; K is then the summed per-device verified
+        totals (exact: ``cap_dev`` holds every dim-0 candidate).
         """
         spec = self.spec
         if spec.algo not in ("sbm", "sbm_chunked", "sbm_binary"):
@@ -592,18 +623,32 @@ class MatchPlan:
         from . import distributed as dist
         mesh = dist.resolve_mesh(spec.mesh)
         nshards = int(np.prod(mesh.devices.shape))
-        cap = out_cap if self.d == 1 else self._cand_bound(S, U)
-        f = self._jitted("dist_pairs", dist._dist_pairs,
-                         static_argnames=("cap", "nshards", "mesh"))
-        pairs, counts, ver_tot = f(S.lo, S.hi, U.lo, U.hi, cap=cap,
-                                   nshards=nshards, mesh=mesh)
-        if self.d == 1:
-            k = int(np.sum(np.asarray(counts), dtype=np.int64))
-            return pairs, k
-        k = int(np.sum(np.asarray(ver_tot), dtype=np.int64))
-        fc = self._jitted("dist_compact", compact_pairs,
-                          static_argnames=("max_pairs",))
-        return fc(pairs, max_pairs=out_cap), k
+        split_s = dist.sample_splitters(S.lo[:, 0], S.n, nshards)
+        split_u = dist.sample_splitters(U.lo[:, 0], U.n, nshards)
+        f1 = self._jitted("dist_pairs_pass1", dist._dist_pairs_pass1,
+                          static_argnames=("cap_s", "cap_u", "nshards",
+                                           "mesh"))
+        counts, s_sorted, perm_s, u_sorted, perm_u, ovf = f1(
+            S.lo, S.hi, U.lo, U.hi, split_s, split_u,
+            cap_s=dist.bucket_cap(S.n, nshards, spec.overprovision),
+            cap_u=dist.bucket_cap(U.n, nshards, spec.overprovision),
+            nshards=nshards, mesh=mesh)
+        if int(np.asarray(ovf)) > 0:
+            raise OverflowError(
+                "distributed SBM bucket overflow; raise overprovision")
+        counts_h = np.asarray(counts)
+        k0 = int(np.sum(counts_h, dtype=np.int64))
+        dev_tot = counts_h.reshape(nshards, -1).sum(axis=1,
+                                                    dtype=np.int64)
+        cap_dev = self._resolve_cap_dev(int(dev_tot.max(initial=0)))
+        f2 = self._jitted("dist_pairs_emit", dist._dist_pairs_emit,
+                          static_argnames=("cap_dev", "nshards", "mesh"))
+        bufs, ver = f2(S.lo, S.hi, U.lo, U.hi, u_sorted, s_sorted,
+                       perm_s, perm_u, cap_dev=cap_dev, nshards=nshards,
+                       mesh=mesh)
+        ver_h = np.asarray(ver, dtype=np.int64)
+        k = k0 if self.d == 1 else int(ver_h.sum())
+        return ShardedPairs(bufs, ver_h, out_cap, k), k
 
     # -- masks --------------------------------------------------------------
     def mask(self, S: Regions, U: Regions) -> Array:
@@ -692,12 +737,6 @@ def select_rows(rows: Array, keep: Array, cap: int) -> Array:
     guarded gather)."""
     sel = jnp.nonzero(keep, size=cap, fill_value=-1)[0]
     return jnp.where(sel[:, None] >= 0, rows[jnp.maximum(sel, 0)], -1)
-
-
-def compact_pairs(pairs: Array, max_pairs: int) -> Array:
-    """Drop −1 holes from a pair buffer (e.g. the distributed emit-time
-    d-dim filter), recompact into ``max_pairs`` slots."""
-    return select_rows(pairs, pairs[:, 0] >= 0, max_pairs)
 
 
 def describe_pair_range_errors(arr: np.ndarray, m: int,

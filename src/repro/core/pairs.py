@@ -23,9 +23,10 @@ defines the single contract both shapes implement:
 
 ``DensePairs`` is the thin wrapper over an in-memory dense buffer;
 ``kernels.ops.CSRPairs`` subclasses ``PairsResult`` for the lazy CSR
-decode view.  ``dd_match.pairs_to_set`` and
-``MatchPlan.validate_pairs`` consume any ``PairsResult`` window by
-window.
+decode view; ``ShardedPairs`` wraps the distributed backend's stack of
+per-device emit buffers and assembles the dense view lazily on host.
+``dd_match.pairs_to_set`` and ``MatchPlan.validate_pairs`` consume any
+``PairsResult`` window by window.
 """
 from __future__ import annotations
 
@@ -126,4 +127,62 @@ class DensePairs(PairsResult):
 
     def __repr__(self) -> str:
         return (f"DensePairs(cap={self.cap}, count={self.count}, "
+                f"nbytes={self.nbytes})")
+
+
+class ShardedPairs(PairsResult):
+    """``PairsResult`` over the distributed backend's per-device buffers.
+
+    ``data`` is the gathered ``(nshards * cap_dev, 2)`` int32 stack of
+    per-device slot-bound emit buffers — device p's pairs are the
+    −1-padded prefix of rows ``[p * cap_dev, (p+1) * cap_dev)``, and
+    ``dev_counts[p]`` is that prefix's length.  Device chunks are
+    disjoint and in global emitter order, so concatenating the valid
+    prefixes in device order *is* the dense emission-order buffer; the
+    concatenation (one device→host transfer + O(cap) copy) runs lazily
+    on first ``decode``/``__array__`` and is cached.  ``nbytes`` is the
+    sharded footprint actually held — ``cap_dev`` rows per device, not
+    the dense ``cap``.
+    """
+
+    def __init__(self, data, dev_counts, cap: int, count: int):
+        self.data = data
+        self.dev_counts = np.asarray(dev_counts, dtype=np.int64)
+        self.nshards = int(self.dev_counts.shape[0])
+        self.cap_dev = int(data.shape[0]) // self.nshards
+        self.cap = int(cap)
+        self.count = int(count)
+        self._dense_host: np.ndarray | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.shape[0]) * 2 * 4
+
+    def _dense(self) -> np.ndarray:
+        if self._dense_host is None:
+            raw = np.asarray(self.data).reshape(self.nshards,
+                                                self.cap_dev, 2)
+            out = np.full((self.cap, 2), -1, np.int32)
+            pos = 0
+            for p in range(self.nshards):
+                take = min(int(self.dev_counts[p]), self.cap - pos)
+                if take > 0:
+                    out[pos:pos + take] = raw[p, :take]
+                pos += take
+                if pos >= self.cap:
+                    break
+            self._dense_host = out
+        return self._dense_host
+
+    def decode(self, start: int = 0, stop: int | None = None):
+        stop = self._check_window(start, stop)
+        return self._dense()[start:stop]
+
+    def __array__(self, dtype=None, copy=None):
+        out = self._dense()
+        return out if dtype is None else out.astype(dtype)
+
+    def __repr__(self) -> str:
+        return (f"ShardedPairs(cap={self.cap}, count={self.count}, "
+                f"nshards={self.nshards}, cap_dev={self.cap_dev}, "
                 f"nbytes={self.nbytes})")

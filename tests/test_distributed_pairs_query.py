@@ -13,11 +13,14 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import numpy as np
 import pytest
+from jax.sharding import Mesh
 
-from repro.core import (DDMService, MatchSpec, brute, build_plan, itm,
-                        make_regions, paper_workload, pairs_to_set)
+from repro.core import (DDMService, MatchSpec, brute, build_plan,
+                        distributed, itm, make_regions, paper_workload,
+                        pairs_to_set)
 from repro.core.engine import MatchPlan
 
 # alpha per d giving a non-trivial K on the small workloads below
@@ -119,6 +122,116 @@ def test_distributed_rejects_non_sbm_and_mask():
 
 
 # ---------------------------------------------------------------------------
+# mesh-size sweep: parity at every P, per-device emit work shrinking
+# ---------------------------------------------------------------------------
+
+def _submesh(p):
+    if p > len(jax.devices()):
+        pytest.skip(f"needs {p} devices, have {len(jax.devices())}")
+    return Mesh(np.array(jax.devices()[:p]), ("shards",))
+
+
+@pytest.mark.parametrize("p", (1, 2, 4, 8))
+def test_distributed_mesh_sweep_parity(p):
+    mesh = _submesh(p)
+    S, U = paper_workload(seed=11, n_total=400, alpha=5.0, d=1)
+    ref = build_plan(MatchSpec(algo="sbm"), S.n, U.n, 1)
+    rp, rk = ref.pairs(S, U)
+    want = pairs_to_set(rp, U.n, S.n)
+    plan = MatchPlan(_dist(mesh=mesh), S.n, U.n, 1)
+    assert plan.count(S, U) == rk, p
+    pairs, k = plan.pairs(S, U)
+    assert k == rk, p
+    assert pairs_to_set(pairs, U.n, S.n) == want, p
+
+
+def _emit_cap_dev(S, U, mesh) -> int:
+    """Static per-device emit capacity, via the auditor's jit hook."""
+    from repro.analysis.capture import capture_plan_executables
+    records = []
+    with capture_plan_executables(records):
+        plan = MatchPlan(_dist(capacity="exact", mesh=mesh), S.n, U.n, 1)
+        plan.pairs(S, U)
+    caps = [r.kwargs["cap_dev"] for r in records
+            if r.name == "dist_pairs_emit"]
+    assert caps, "dist_pairs_emit never ran"
+    return max(caps)
+
+
+def test_distributed_emit_work_shrinks_with_mesh():
+    # the emit is slot-bound: each device's static work bound is its
+    # own share of K (max per-device pass-1 total under ``exact``),
+    # not the global buffer — so the captured ``cap_dev`` must shrink
+    # as the mesh grows.  A full-cap scan would be flat in P.
+    ndev = len(jax.devices())
+    if ndev < 2:
+        pytest.skip("needs >= 2 devices to compare emit bounds")
+    S, U = paper_workload(seed=12, n_total=400, alpha=8.0, d=1)
+    c1 = _emit_cap_dev(S, U, _submesh(1))
+    cp = _emit_cap_dev(S, U, _submesh(ndev))
+    assert cp < c1, (cp, c1)
+
+
+# ---------------------------------------------------------------------------
+# regression: int32 shard partials, prefix splitters, integer queries
+# ---------------------------------------------------------------------------
+
+def test_distributed_count_high_k_exceeds_int32():
+    # all-overlap: K = n·m = 2,209,000,000 > 2³¹.  A whole-shard int32
+    # partial wraps negative (device-side jnp.int64 silently demotes
+    # without x64); the block-sum + host-int64 reduction is exact.
+    n = m = 47000
+    S = make_regions(np.zeros((n, 1)), np.full((n, 1), 10.0))
+    U = make_regions(np.full((m, 1), 1.0), np.full((m, 1), 2.0))
+    plan = MatchPlan(_dist(), n, m, 1)
+    assert plan.count(S, U) == n * m
+
+
+def test_sample_splitters_span_the_whole_stream():
+    # host-ordered stream: a long low-valued prefix (the subscription
+    # lows come first) followed by a far high-valued cluster.  A prefix
+    # "sample" sees only the low cluster, collapses every splitter
+    # below 1.0, and funnels the entire high cluster into one bucket;
+    # the strided sample must reach both.
+    tot = 200_000
+    v = np.concatenate([
+        np.linspace(0.0, 1.0, tot // 2),
+        np.linspace(1000.0, 1001.0, tot // 2)]).astype(np.float32)
+    qs = np.asarray(distributed.sample_splitters(v, tot, 8))
+    assert qs.shape == (7,)
+    assert qs.max() >= 1000.0          # reached the far cluster
+    assert qs.min() <= 1.0             # still covers the prefix
+    assert np.all(np.diff(qs) >= 0)
+    assert np.asarray(
+        distributed.sample_splitters(v, tot, 1)).shape == (0,)
+
+
+def test_distributed_count_clustered_stream_no_overflow():
+    # every S endpoint sits far below every U endpoint, so the stream
+    # prefix is entirely S-valued: prefix-drawn splitters collapse into
+    # the S range and one bucket receives all 2m U endpoints — a
+    # guaranteed OverflowError at overprovision=2.5 on any multi-shard
+    # mesh before the strided-sample fix (the 8-device subprocess
+    # below exercises exactly this on single-device hosts too).
+    n = m = 40000
+    s_lo = np.linspace(0.0, 1.0, n)[:, None]
+    u_lo = np.linspace(1000.0, 1001.0, m)[:, None]
+    S = make_regions(s_lo, s_lo + 0.5)
+    U = make_regions(u_lo, u_lo + 0.5)
+    assert MatchPlan(_dist(), n, m, 1).count(S, U) == 0
+
+
+def test_distributed_query_rejects_integer_dtype():
+    S, U = paper_workload(seed=13, n_total=120, alpha=4.0, d=2)
+    plan = MatchPlan(_dist(algo="itm", capacity="grow"), S.n, U.n, 2)
+    tree = itm.build_tree(U)
+    q_lo = np.asarray(S.lo[:5]).astype(np.int32)
+    q_hi = np.asarray(S.hi[:5]).astype(np.int32) + 1
+    with pytest.raises(TypeError, match="floating"):
+        plan.query(tree, U, q_lo, q_hi)
+
+
+# ---------------------------------------------------------------------------
 # query(): sharded batched dynamic-service path
 # ---------------------------------------------------------------------------
 
@@ -211,6 +324,41 @@ DIST8_SCRIPT = textwrap.dedent("""
         warm = dp.traces
         dp.query(tree, U, S.lo, S.hi)
         assert dp.traces == warm, d
+    # mesh-size sweep P in {1, 2, 4, 8}: set parity at every P, and the
+    # captured static per-device emit bound (cap_dev) must shrink with
+    # the mesh — the slot-bound emit is O(K/P + P) per device, never a
+    # full-capacity scan.
+    from jax.sharding import Mesh
+    from repro.analysis.capture import capture_plan_executables
+    S, U = paper_workload(seed=21, n_total=800, alpha=8.0, d=1)
+    ref = build_plan(MatchSpec(algo="sbm"), S.n, U.n, 1)
+    rp, rk = ref.pairs(S, U)
+    want = pairs_to_set(rp, U.n, S.n)
+    emit_caps = {}
+    for p in (1, 2, 4, 8):
+        mesh = Mesh(np.array(jax.devices()[:p]), ("shards",))
+        records = []
+        with capture_plan_executables(records):
+            plan = MatchPlan(
+                MatchSpec(algo="sbm", backend="distributed",
+                          capacity="exact", mesh=mesh), S.n, U.n, 1)
+            pairs, k = plan.pairs(S, U)
+        assert k == rk and pairs_to_set(pairs, U.n, S.n) == want, p
+        emit_caps[p] = max(r.kwargs["cap_dev"] for r in records
+                           if r.name == "dist_pairs_emit")
+    assert emit_caps[8] < emit_caps[4] < emit_caps[2] < emit_caps[1], \\
+        emit_caps
+    # sorted/clustered stream on the real 8-shard mesh: prefix-drawn
+    # splitters overflowed here at overprovision=2.5 before the
+    # strided-sample fix
+    from repro.core import make_regions
+    n = m = 40000
+    s_lo = np.linspace(0.0, 1.0, n)[:, None]
+    u_lo = np.linspace(1000.0, 1001.0, m)[:, None]
+    Sc = make_regions(s_lo, s_lo + 0.5)
+    Uc = make_regions(u_lo, u_lo + 0.5)
+    assert MatchPlan(MatchSpec(algo="sbm", backend="distributed"),
+                     n, m, 1).count(Sc, Uc) == 0
     print("DIST8_OK")
 """)
 
